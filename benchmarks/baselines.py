@@ -1,0 +1,53 @@
+"""The paper's comparison baselines, reimplemented faithfully.
+
+Paper §2.3.2 benchmarks three implementations of the same DEPAM workflow:
+  * Scala/Spark        -> ours: JAX (+Pallas kernels) pipeline
+  * Python 3.5 + scipy -> ``scipy_welch_baseline`` (vectorized best
+                          practice "from the data-scientist community")
+  * Matlab 2016b       -> ``loop_baseline``: PAMGuide-style explicit
+                          per-frame loop (the common Matlab idiom) in
+                          pure numpy — no FFT batching, per-record Python
+                          loop, exactly how PAMGuide's Matlab code walks
+                          windows.
+
+All three produce bit-comparable Welch PSDs (tested), mirroring the
+paper's <1e-16 cross-implementation RMSE check.
+"""
+from __future__ import annotations
+
+import numpy as np
+import scipy.signal as ss
+
+from repro.core.params import DepamParams
+from repro.core.windows import np_window
+
+
+def scipy_welch_baseline(records: np.ndarray, p: DepamParams) -> np.ndarray:
+    """Python-community best practice: scipy.signal.welch, batched axis."""
+    _, psd = ss.welch(records, fs=p.fs, window=p.window,
+                      nperseg=p.window_size, noverlap=p.window_overlap,
+                      nfft=p.nfft, detrend=False, scaling="density",
+                      axis=-1)
+    return psd
+
+
+def loop_baseline(records: np.ndarray, p: DepamParams) -> np.ndarray:
+    """PAMGuide/Matlab-style explicit window loop (per frame np.fft)."""
+    w = np_window(p.window, p.window_size)
+    scale = 1.0 / (p.fs * np.sum(w * w))
+    hop = p.hop
+    out = np.zeros((records.shape[0], p.n_bins))
+    for r in range(records.shape[0]):
+        x = records[r]
+        n_frames = (x.shape[0] - p.window_size) // hop + 1
+        acc = np.zeros(p.n_bins)
+        for i in range(n_frames):
+            seg = x[i * hop: i * hop + p.window_size] * w
+            spec = np.fft.rfft(seg, n=p.nfft)
+            acc += (spec.real ** 2 + spec.imag ** 2)
+        psd = acc * (scale / n_frames)
+        psd[1:] *= 2.0
+        if p.nfft % 2 == 0:
+            psd[-1] /= 2.0
+        out[r] = psd
+    return out

@@ -1,0 +1,58 @@
+"""DEPAM kernel roofline + block-size hillclimb (§Perf cell 3).
+
+The paper's own workload: Welch PSD over both benchmark parameter sets.
+Costs come from the structural BlockSpec model (kernels/roofline.py);
+this sweep is the hypothesis->change->measure loop for the kernel tiling,
+and the fused-vs-unfused comparison quantifies the HBM traffic the fusion
+removes (the per-frame PSD matrix never hitting HBM).
+"""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.core.params import PARAM_SET_1, PARAM_SET_2
+from repro.kernels import roofline as kr
+
+
+def run():
+    rows = []
+    # paper set 1: one 60 s record = 15358 frames of 256 @ hop 128
+    p1 = PARAM_SET_1
+    fpr1 = p1.frames_per_record
+    for fc in (128, 256, 512, 1024):
+        for bk in (128, 256):
+            c = kr.welch_fused_cost(1, fpr1, p1, chunk_frames=fc,
+                                    block_bins=bk)
+            rows.append(common.row(
+                f"depam_roofline/pset1_fused/fc={fc}/bk={bk}",
+                max(c.memory_s, c.compute_s) * 1e6,
+                f"bound={c.bound};ai={c.arithmetic_intensity:.1f};"
+                f"vmem_ok={c.fits_vmem()};hbmMB={c.hbm_bytes/1e6:.1f}"))
+    un = kr.frame_psd_cost(fpr1, p1)
+    fu = kr.welch_fused_cost(1, fpr1, p1, chunk_frames=512, block_bins=128)
+    rows.append(common.row(
+        "depam_roofline/pset1_fused_vs_unfused", 0.0,
+        f"unfused_hbmMB={un.hbm_bytes/1e6:.1f};"
+        f"fused_hbmMB={fu.hbm_bytes/1e6:.1f};"
+        f"saving={un.hbm_bytes/fu.hbm_bytes:.2f}x"))
+
+    # paper set 2: 10 s records = 80 frames of 4096, no overlap
+    p2 = PARAM_SET_2
+    fpr2 = p2.frames_per_record
+    for n1 in (32, 64, 128):
+        c = kr.ct_cost(fpr2, p2, n1=n1)
+        rows.append(common.row(
+            f"depam_roofline/pset2_ct/n1={n1}",
+            max(c.memory_s, c.compute_s) * 1e6,
+            f"bound={c.bound};flops={c.flops:.2e};"
+            f"vmem_ok={c.fits_vmem()}"))
+    d = kr.direct_cost(fpr2, p2)
+    c64 = kr.ct_cost(fpr2, p2, n1=64)
+    rows.append(common.row(
+        "depam_roofline/pset2_ct_vs_direct", 0.0,
+        f"direct_flops={d.flops:.2e};ct_flops={c64.flops:.2e};"
+        f"saving={d.flops/c64.flops:.1f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,60 @@
+"""Paper Fig 3.1: single-node execution time vs workload.
+
+Three implementations of the DEPAM workflow on one node (paper: Spark
+standalone vs Matlab vs Python; here: JAX+Pallas vs scipy vs Matlab-style
+loop), swept over workload sizes, parameter set 1.  The paper's headline:
+the distributed engine in single-node mode BEATS the sequential baselines
+(~2x vs Matlab/Python at 135 GB).  We reproduce the ordering at
+container-scale workloads and report GB/min for extrapolation.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+from benchmarks import baselines, common
+from repro.core import pipeline
+from repro.core.manifest import DatasetManifest
+from repro.core.params import DepamParams
+
+
+def make_params(nfft=256, ws=256, ov=128, sec=2.0):
+    return DepamParams(nfft=nfft, window_size=ws, window_overlap=ov,
+                       record_size_sec=sec)
+
+
+def run(workload_records=(4, 8, 16), record_sec=2.0, iters=3):
+    p = make_params(sec=record_sec)
+    rows = []
+    for n_rec in workload_records:
+        m = DatasetManifest(n_files=1, records_per_file=n_rec,
+                            record_size=p.record_size, fs=p.fs, seed=1)
+        rng = np.random.default_rng(0)
+        records = rng.standard_normal((n_rec, p.record_size)) \
+            .astype(np.float32)
+        gb = records.nbytes / 1e9
+
+        jrecords = jax.numpy.asarray(records)
+        from repro.kernels import ops as kops
+
+        def jax_run():
+            jax.block_until_ready(kops.welch_psd(jrecords, p))
+
+        t_jax = common.timeit(jax_run, iters=iters)
+        t_scipy = common.timeit(
+            lambda: baselines.scipy_welch_baseline(records, p),
+            iters=iters)
+        t_loop = common.timeit(lambda: baselines.loop_baseline(records, p),
+                               warmup=0, iters=1)
+
+        for name, t in (("jax_pallas", t_jax), ("python_scipy", t_scipy),
+                        ("matlab_style_loop", t_loop)):
+            rows.append(common.row(
+                f"fig3_1/{name}/gb={gb:.4f}", t * 1e6,
+                f"gb_per_min={gb / (t / 60):.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

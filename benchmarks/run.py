@@ -1,0 +1,29 @@
+"""Benchmark aggregator — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    fast = "--fast" in sys.argv
+    rows = ["name,us_per_call,derived"]
+
+    from benchmarks import fig3_1_single_node, fig3_2_speedup, \
+        table2_1_param_sets, roofline_report
+
+    rows += fig3_1_single_node.run(
+        workload_records=(4, 8) if fast else (4, 8, 16))
+    rows += fig3_2_speedup.run()
+    rows += table2_1_param_sets.run(n_records=2 if fast else 4)
+    rows += roofline_report.run()
+
+    print("\n".join(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Insert the generated roofline tables into EXPERIMENTS.md."""
+from __future__ import annotations
+
+MARK = "<!-- ROOFLINE TABLES INSERTED BY benchmarks/write_experiments.py -->"
+
+
+def main() -> None:
+    from benchmarks import roofline_report
+
+    cells = roofline_report.load_cells("results/dryrun")
+    single = roofline_report.markdown_table(cells, "single")
+    multi = roofline_report.markdown_table(cells, "multi")
+    block = (f"{MARK}\n\n### Single pod — 16x16 = 256 chips\n\n{single}\n\n"
+             f"### Multi-pod — 2x16x16 = 512 chips\n\n{multi}\n")
+    with open("EXPERIMENTS.md") as f:
+        txt = f.read()
+    start = txt.index(MARK)
+    end = txt.index("\n### Reading the table")
+    txt = txt[:start] + block + txt[end + 1:]
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(txt)
+    print("EXPERIMENTS.md roofline tables updated "
+          f"({sum(1 for c in cells if c['status']=='ok')} ok cells)")
+
+
+if __name__ == "__main__":
+    main()

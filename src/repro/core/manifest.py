@@ -1,0 +1,116 @@
+"""Record manifest + shard planner — the HDFS/YARN analogue.
+
+The paper's system gets its scalability from HDFS splitting files into
+blocks placed on the workers that process them ("adding more workers allows
+to read more files in parallel").  Our equivalent is a *deterministic record
+manifest*: a pure function record_index -> (file, offset) over the dataset,
+plus a planner that carves the record index space into equal contiguous
+shards, one per data-parallel device.
+
+Determinism is the fault-tolerance story (Spark lineage): any shard can be
+recomputed from scratch by any worker because the mapping is stateless.
+The planner also supports *elastic replanning* — given a committed cursor
+and a new worker count, it produces a fresh balanced plan over the
+remaining records (what YARN re-allocation + Spark dynamic allocation do).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DatasetManifest:
+    """A dataset of ``n_files`` files, each ``records_per_file`` records."""
+
+    n_files: int
+    records_per_file: int
+    record_size: int          # samples per record
+    fs: float
+    seed: int = 0             # generation seed for synthetic datasets
+
+    @property
+    def n_records(self) -> int:
+        return self.n_files * self.records_per_file
+
+    @property
+    def total_gb(self) -> float:
+        """Workload size in GB assuming float32 samples (paper reports GB)."""
+        return self.n_records * self.record_size * 4 / 1e9
+
+    def locate(self, record_idx: int) -> tuple[int, int]:
+        """record index -> (file index, record-within-file index)."""
+        return divmod(record_idx, self.records_per_file)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardPlan:
+    """Balanced assignment of record indices to (step, shard) slots.
+
+    Layout: step-major, then shard, then chunk —
+
+        global_idx = start + step*(n_shards*chunk) + shard*chunk + c
+
+    so each shard reads a *contiguous* run of ``chunk_records`` per step
+    (the HDFS-block locality analogue) while the set of records committed
+    after k steps is the global prefix [start, start + k*n_shards*chunk).
+    A single integer cursor therefore fully describes progress — that is
+    what makes checkpoint/restart and elastic replanning exact.
+
+    Every shard processes the same number of slots per step (SPMD
+    requirement); slots beyond ``stop`` are padding, masked via step_mask.
+    """
+
+    start: int                # first record covered by this plan
+    stop: int                 # one past the last record
+    n_shards: int
+    chunk_records: int        # records per shard per step
+
+    @property
+    def n_live(self) -> int:
+        return max(self.stop - self.start, 0)
+
+    @property
+    def records_per_step(self) -> int:
+        return self.n_shards * self.chunk_records
+
+    @property
+    def n_steps(self) -> int:
+        return -(-self.n_live // self.records_per_step)    # ceil
+
+    def step_indices(self, step: int) -> np.ndarray:
+        """Global record indices for one step, shape (n_shards, chunk)."""
+        s = np.arange(self.n_shards)[:, None]
+        c = np.arange(self.chunk_records)[None, :]
+        return (self.start + step * self.records_per_step
+                + s * self.chunk_records + c)
+
+    def step_mask(self, step: int) -> np.ndarray:
+        return self.step_indices(step) < self.stop
+
+    def cursor_after(self, step: int) -> int:
+        """Resume cursor after committing steps 0..step (inclusive)."""
+        return min(self.start + (step + 1) * self.records_per_step,
+                   self.stop)
+
+
+def plan(manifest: DatasetManifest, n_shards: int, chunk_records: int,
+         start: int = 0) -> ShardPlan:
+    return ShardPlan(start=start, stop=manifest.n_records,
+                     n_shards=n_shards, chunk_records=chunk_records)
+
+
+def replan(old: ShardPlan, committed_steps: int, new_n_shards: int) -> ShardPlan:
+    """Elastic re-shard: cover exactly the records the old plan had not
+    committed, balanced over ``new_n_shards`` workers.
+
+    NOTE committed-step accounting is per-step-across-all-shards, i.e. the
+    pipeline commits a step only once every shard finished it (a barrier the
+    runtime already has at the device step).  Uncommitted partial work is
+    simply recomputed — idempotent because the manifest is deterministic.
+    """
+    cursor = old.cursor_after(committed_steps - 1) if committed_steps > 0 \
+        else old.start
+    return ShardPlan(start=cursor, stop=old.stop, n_shards=new_n_shards,
+                     chunk_records=old.chunk_records)

@@ -1,0 +1,108 @@
+"""Pure-JAX DEPAM feature chain (the faithful reference implementation).
+
+This is the numerical contract for the whole system: it reproduces
+scipy.signal.welch(x, fs, window, nperseg, noverlap, nfft,
+                   detrend=False, scaling='density', return_onesided=True)
+bin-for-bin, and the derived SPL / TOL / LTSA features as defined by the
+PAM literature the paper builds on (Merchant et al. 2015, PAMGuide).
+
+The Pallas kernels in repro.kernels implement the same math with MXU-native
+matmul DFTs; their oracles (kernels/ref.py) call into this module.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .params import DepamParams
+from .windows import make_window, np_window, window_power
+
+
+def frame_signal(x: jnp.ndarray, window_size: int, hop: int) -> jnp.ndarray:
+    """(..., n_samples) -> (..., n_frames, window_size); drops the tail.
+
+    Implemented as a gather of static strided slices so it lowers to a
+    cheap XLA gather (and stays differentiable / vmappable).
+    """
+    n = x.shape[-1]
+    n_frames = (n - window_size) // hop + 1
+    starts = jnp.arange(n_frames) * hop
+    idx = starts[:, None] + jnp.arange(window_size)[None, :]
+    return x[..., idx]
+
+
+def periodogram_scale(p: DepamParams) -> float:
+    """Density scaling 1/(fs * sum(w^2)) (scipy 'density')."""
+    return 1.0 / (p.fs * window_power(p.window, p.window_size))
+
+
+def np_onesided_weights(nfft: int) -> np.ndarray:
+    """Per-bin one-sided doubling: 2 everywhere except DC (and Nyquist if
+    nfft is even).  Numpy so kernels can constant-fold it at trace time."""
+    n_bins = nfft // 2 + 1
+    w = np.full((n_bins,), 2.0)
+    w[0] = 1.0
+    if nfft % 2 == 0:
+        w[-1] = 1.0
+    return w
+
+
+def onesided_weights(nfft: int, dtype=jnp.float32) -> jnp.ndarray:
+    return jnp.asarray(np_onesided_weights(nfft), dtype=dtype)
+
+
+def frame_psd(x: jnp.ndarray, p: DepamParams) -> jnp.ndarray:
+    """Per-frame one-sided PSD. (..., n_samples) -> (..., n_frames, n_bins)."""
+    frames = frame_signal(x, p.window_size, p.hop)
+    w = make_window(p.window, p.window_size, dtype=x.dtype)
+    spec = jnp.fft.rfft(frames * w, n=p.nfft, axis=-1)
+    power = jnp.real(spec) ** 2 + jnp.imag(spec) ** 2
+    scale = jnp.asarray(periodogram_scale(p), dtype=x.dtype)
+    return power * scale * onesided_weights(p.nfft, dtype=x.dtype)
+
+
+def welch_psd(x: jnp.ndarray, p: DepamParams) -> jnp.ndarray:
+    """Welch PSD: mean of per-frame PSDs. (..., n) -> (..., n_bins)."""
+    return jnp.mean(frame_psd(x, p), axis=-2)
+
+
+def spl_wideband(psd: jnp.ndarray, p: DepamParams) -> jnp.ndarray:
+    """Wideband SPL in dB re 1 uPa: 10*log10(integral of PSD df) + gain."""
+    band_power = jnp.sum(psd, axis=-1) * jnp.asarray(p.df, psd.dtype)
+    return 10.0 * jnp.log10(jnp.maximum(band_power, 1e-30)) + p.gain_db
+
+
+def tol_levels(psd: jnp.ndarray, band_matrix: jnp.ndarray,
+               p: DepamParams) -> jnp.ndarray:
+    """Third-octave levels: 10log10 of banded PSD integrals.
+
+    band_matrix: (n_bins, n_bands) fractional membership (see core.tol).
+    """
+    band_power = (psd @ band_matrix) * jnp.asarray(p.df, psd.dtype)
+    return 10.0 * jnp.log10(jnp.maximum(band_power, 1e-30)) + p.gain_db
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def record_features(record: jnp.ndarray, p: DepamParams,
+                    band_matrix: jnp.ndarray | None = None) -> dict:
+    """Full DEPAM chain for one record (or a batch of records).
+
+    record: (..., record_size) waveform in Pa (or uncalibrated counts).
+    Returns dict with 'welch' (..., n_bins), 'spl' (...,), and optionally
+    'tol' (..., n_bands).
+    """
+    welch = welch_psd(record, p)
+    out = {"welch": welch, "spl": spl_wideband(welch, p)}
+    if band_matrix is not None:
+        out["tol"] = tol_levels(welch, band_matrix, p)
+    return out
+
+
+def ltsa(records: jnp.ndarray, p: DepamParams) -> jnp.ndarray:
+    """Long-Term Spectral Average: (n_records, record_size) ->
+    (n_records, n_bins) in dB."""
+    welch = welch_psd(records, p)
+    return 10.0 * jnp.log10(jnp.maximum(welch, 1e-30)) + p.gain_db

@@ -1,0 +1,81 @@
+"""Resumable feature store for pipeline outputs (fault-tolerance layer).
+
+Results (LTSA rows, SPL, TOL) live in memory-mapped .npy files; progress is
+a cursor JSON committed with write-to-temp + atomic rename, so a crash at
+any point leaves either the old or the new cursor — never a torn state.
+On resume, the committed cursor tells the driver which plan steps to skip;
+any step that was in flight when the job died is recomputed (idempotent:
+the manifest is deterministic and writes are per-record).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from .manifest import DatasetManifest, ShardPlan
+from .params import DepamParams
+from .tol import band_matrix as make_band_matrix
+
+
+class FeatureStore:
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        self._arrays: dict[str, np.memmap] | None = None
+
+    # -- result arrays ------------------------------------------------
+    def arrays(self, m: DatasetManifest, p: DepamParams, with_tol: bool):
+        if self._arrays is not None:
+            return self._arrays
+        spec = {"welch": (m.n_records, p.n_bins),
+                "spl": (m.n_records,)}
+        if with_tol:
+            spec["tol"] = (m.n_records, make_band_matrix(p).shape[1])
+        out = {}
+        for name, shape in spec.items():
+            path = os.path.join(self.root, f"{name}.npy")
+            if os.path.exists(path):
+                out[name] = np.lib.format.open_memmap(path, mode="r+")
+            else:
+                out[name] = np.lib.format.open_memmap(
+                    path, mode="w+", dtype=np.float32, shape=shape)
+        self._arrays = out
+        return out
+
+    # -- cursor -------------------------------------------------------
+    def _cursor_path(self) -> str:
+        return os.path.join(self.root, "cursor.json")
+
+    def commit(self, plan: ShardPlan, step: int, welch_sum: np.ndarray,
+               live: float) -> None:
+        if self._arrays:
+            for a in self._arrays.values():
+                a.flush()
+        state = {"cursor": plan.cursor_after(step),
+                 "plan": {"start": plan.start, "stop": plan.stop,
+                          "n_shards": plan.n_shards,
+                          "chunk_records": plan.chunk_records},
+                 "welch_sum": welch_sum.tolist(), "live": live}
+        tmp = self._cursor_path() + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(state, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, self._cursor_path())      # atomic commit
+
+    def load_cursor(self) -> dict | None:
+        try:
+            with open(self._cursor_path()) as f:
+                return json.load(f)
+        except FileNotFoundError:
+            return None
+
+    def committed_steps(self, plan: ShardPlan) -> int:
+        """How many steps of ``plan`` are already fully committed."""
+        st = self.load_cursor()
+        if st is None:
+            return 0
+        done = st["cursor"] - plan.start
+        return max(0, min(done // plan.records_per_step, plan.n_steps))

@@ -1,0 +1,34 @@
+"""Analysis windows.
+
+Matches scipy.signal.get_window(..., fftbins=True) (periodic windows), which
+is what scipy.signal.welch uses and what PAMGuide's Hamming corresponds to
+for long averaging.
+
+``np_window`` is the numpy (float64) ground truth; it is what kernel
+constant-folding uses (kernels build DFT matrices at trace time, so they
+must never touch jnp).  ``make_window`` is the jnp view of the same values.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def np_window(kind: str, n: int) -> np.ndarray:
+    if kind == "rect":
+        return np.ones(n, dtype=np.float64)
+    if kind == "hann":
+        return 0.5 - 0.5 * np.cos(2.0 * np.pi * np.arange(n) / n)
+    if kind == "hamming":
+        return 0.54 - 0.46 * np.cos(2.0 * np.pi * np.arange(n) / n)
+    raise ValueError(f"unknown window kind: {kind}")
+
+
+def make_window(kind: str, n: int, dtype=jnp.float32) -> jnp.ndarray:
+    return jnp.asarray(np_window(kind, n), dtype=dtype)
+
+
+def window_power(kind: str, n: int) -> float:
+    """sum(w**2), used for the density PSD scale 1/(fs*sum(w^2))."""
+    w = np_window(kind, n)
+    return float(np.sum(w * w))

@@ -1,0 +1,121 @@
+"""Host-side prefetching loader with speculative execution.
+
+Spark mitigates stragglers by re-launching slow tasks on other executors
+and taking whichever copy finishes first.  On TPU the device step is SPMD
+(no intra-step stragglers by construction), so stragglers live in the HOST
+input pipeline — slow disks, slow decode.  This loader reproduces Spark's
+two answers at that layer:
+
+  * over-decomposition: each plan step is split into ``overdecompose``
+    read tasks scheduled on a shared read pool, so a slow read only delays
+    its own sub-slice (work stealing comes free from the shared pool queue);
+  * speculative re-execution: when a task's runtime exceeds
+    ``speculate_factor`` x the running median, a duplicate is launched;
+    first completion wins.  Reads are pure functions of the record index
+    (the lineage property), so duplicates are safe.
+
+Prefetch depth ``depth`` overlaps host IO with device compute — the
+compute/communication-overlap trick applied at the data layer.
+
+Threading note: orchestration (step assembly, speculation timers) runs on a
+dedicated pool, actual reads on another.  A single shared pool would
+self-deadlock — wrappers would occupy every worker while waiting on read
+tasks that can never be scheduled.
+"""
+from __future__ import annotations
+
+import concurrent.futures as cf
+import threading
+import time
+from typing import Callable
+
+import numpy as np
+
+from repro.core.manifest import ShardPlan
+
+
+class SpeculativeLoader:
+    def __init__(self, reader: Callable[[np.ndarray], np.ndarray],
+                 plan: ShardPlan, workers: int = 4,
+                 overdecompose: int = 4, depth: int = 2,
+                 speculate_factor: float = 4.0,
+                 min_speculate_sec: float = 0.05):
+        self.reader = reader
+        self.plan = plan
+        self.overdecompose = max(1, overdecompose)
+        self.depth = max(1, depth)
+        self.speculate_factor = speculate_factor
+        self.min_speculate_sec = min_speculate_sec
+        # reads never block on other tasks -> safe in one pool;
+        # step assembly blocks on reads -> must live in its own pool.
+        self.read_pool = cf.ThreadPoolExecutor(max_workers=workers)
+        self.step_pool = cf.ThreadPoolExecutor(max_workers=self.depth)
+        self.durations: list[float] = []
+        self.speculated = 0
+        self._lock = threading.Lock()
+
+    # -- one read task (leaf work, runs on read_pool) -------------------
+    def _timed_read(self, idx: np.ndarray) -> np.ndarray:
+        t0 = time.monotonic()
+        out = self.reader(idx)
+        with self._lock:
+            self.durations.append(time.monotonic() - t0)
+        return out
+
+    # -- step assembly (runs on step_pool; blocks only on read_pool) ----
+    def _load_step(self, step: int) -> tuple[np.ndarray, np.ndarray]:
+        idx = self.plan.step_indices(step)
+        flat = idx.reshape(-1)
+        parts = [p for p in np.array_split(flat, self.overdecompose)
+                 if p.size]
+        futs = {i: self.read_pool.submit(self._timed_read, p)
+                for i, p in enumerate(parts)}
+        results: dict[int, np.ndarray] = {}
+        while len(results) < len(parts):
+            with self._lock:
+                med = (float(np.median(self.durations))
+                       if self.durations else None)
+            budget = None if med is None else max(
+                self.speculate_factor * med, self.min_speculate_sec)
+            for i, fut in list(futs.items()):
+                if i in results:
+                    continue
+                try:
+                    results[i] = fut.result(timeout=budget)
+                except TimeoutError:
+                    # straggler: launch a duplicate, first one wins
+                    with self._lock:
+                        self.speculated += 1
+                    backup = self.read_pool.submit(self._timed_read,
+                                                   parts[i])
+                    done, _ = cf.wait([fut, backup],
+                                      return_when=cf.FIRST_COMPLETED)
+                    results[i] = next(iter(done)).result()
+        out = np.concatenate([results[i] for i in range(len(parts))], axis=0)
+        return out.reshape(*idx.shape, -1), self.plan.step_mask(step)
+
+    def __iter__(self):
+        """Yield (step, payload, mask) with ``depth`` steps of prefetch."""
+        pending: dict[int, cf.Future] = {}
+        n = self.plan.n_steps
+        for step in range(min(self.depth, n)):
+            pending[step] = self.step_pool.submit(self._load_step, step)
+        for step in range(n):
+            payload, mask = pending.pop(step).result()
+            nxt = step + self.depth
+            if nxt < n:
+                pending[nxt] = self.step_pool.submit(self._load_step, nxt)
+            yield step, payload, mask
+
+    def stats(self) -> dict:
+        with self._lock:
+            d = (np.asarray(self.durations) if self.durations
+                 else np.zeros(1))
+            spec = self.speculated
+        return {"tasks": int(d.size), "speculated": spec,
+                "median_s": float(np.median(d)),
+                "p99_s": float(np.quantile(d, 0.99))}
+
+    def close(self):
+        self.read_pool.shutdown(wait=False, cancel_futures=True)
+        self.step_pool.shutdown(wait=False, cancel_futures=True)

@@ -1,0 +1,321 @@
+"""Loop-aware static analysis of compiled (post-SPMD) HLO text.
+
+Why: XLA's HloCostAnalysis (exposed as compiled.cost_analysis()) visits
+every instruction ONCE — while-loop bodies are not multiplied by their
+trip counts.  Our stacks are lax.scan everywhere (layers, microbatches,
+attention chunks), so both FLOPs and collective bytes would be
+undercounted by 1-2 orders of magnitude.  This module re-derives the
+roofline inputs with loop multiplicity:
+
+  1. parse computations and per-computation symbol tables (every
+     instruction line defines its result shape; operand shapes resolve
+     through the table, parameters through the signature);
+  2. build the call graph: while(condition=, body=) edges carry the trip
+     count from backend_config known_trip_count (fallback: the constant
+     in the condition's compare), fusion/call/to_apply edges carry 1;
+  3. propagate multipliers from ENTRY;
+  4. FLOPs: 2 * prod(result_dims) * prod(contraction_dims) per dot
+     (batch dims handled — they appear in the result), x multiplier;
+  5. HBM bytes: operands + result of every *top-level* op in non-fusion
+     computations (fusion internals never touch HBM), x multiplier;
+  6. collective wire bytes with the ring formulas, x multiplier.
+
+Everything is per-device (post-SPMD local shapes).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
+}
+
+# greedy params group: parameter lists contain nested parens (tuple types),
+# so match up to the LAST ") ->" on the line
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->.*\{\s*$")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\([^=]*?\)|[\w\[\],\{\} ]+?)\s+"
+    r"([\w\-]+)\((.*)$")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[^\d]*(\d+)')
+_CALL_RE = re.compile(r"(?:calls=|to_apply=|condition=|body=)%?([\w\.\-]+)")
+_COND_BODY_RE = re.compile(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[^=]*?\})\}")
+_GROUPS_ID_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_SKIP_BYTES_OPS = {
+    "tuple", "get-tuple-element", "parameter", "constant", "bitcast",
+    "copy-start", "copy-done", "after-all", "partition-id", "replica-id",
+    "tuple-select", "conditional", "while", "call",
+}
+
+
+def _dims(txt: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(txt):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _bytes_of(txt: str) -> int:
+    total = 0
+    for dt, dims in _dims(txt):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape_txt: str
+    op: str
+    rest: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    params_txt: str
+    instrs: list
+    shapes: dict        # symbol -> shape text
+
+
+def parse_computations(hlo: str) -> dict:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    entry_name = None
+    for raw in hlo.splitlines():
+        # strip /*index=N*/ comments — the '=' inside breaks shape matching
+        line = re.sub(r"/\*.*?\*/", "", raw).rstrip()
+        m = _COMP_RE.match(line.strip()) if line.strip().endswith("{") else None
+        if m and ("->" in line):
+            cur = Computation(m.group(1), m.group(2), [], {})
+            comps[cur.name] = cur
+            if line.strip().startswith("ENTRY"):
+                entry_name = cur.name
+            # parameter shapes from the signature: name: shape pairs
+            for pname, pshape in re.findall(r"([\w\.\-]+):\s*(\([^)]*\)|[\w\[\],\{\} ]+?)(?:,|$)",
+                                            m.group(2)):
+                cur.shapes[pname] = pshape
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        mi = _INSTR_RE.match(line)
+        if mi:
+            ins = Instr(mi.group(1), mi.group(2).strip(), mi.group(3),
+                        mi.group(4))
+            cur.instrs.append(ins)
+            cur.shapes[ins.name] = ins.shape_txt
+    comps["__entry__"] = comps.get(entry_name) if entry_name else None
+    return comps
+
+
+def _multipliers(comps: dict) -> dict:
+    entry = comps.get("__entry__")
+    mult: dict[str, float] = {}
+    if entry is None:
+        return mult
+
+    def visit(comp: Computation, m: float):
+        mult[comp.name] = mult.get(comp.name, 0.0) + m
+        for ins in comp.instrs:
+            if ins.op == "while":
+                cb = _COND_BODY_RE.search(ins.rest)
+                trip = 1
+                tm = _TRIP_RE.search(ins.rest)
+                if tm:
+                    trip = int(tm.group(1))
+                if cb:
+                    cond, body = cb.group(1), cb.group(2)
+                    if not tm:
+                        trip = _trip_from_cond(comps.get(cond))
+                    if comps.get(body):
+                        visit(comps[body], m * trip)
+                    if comps.get(cond):
+                        visit(comps[cond], m * (trip + 1))
+            else:
+                for cname in _CALL_RE.findall(ins.rest):
+                    if cname in comps and cname != comp.name:
+                        visit(comps[cname], m)
+
+    visit(entry, 1.0)
+    return mult
+
+
+def _trip_from_cond(cond: Computation | None) -> int:
+    if cond is None:
+        return 1
+    best = 1
+    for ins in cond.instrs:
+        if ins.op == "constant":
+            mm = re.search(r"constant\((\d+)\)", "constant(" + ins.rest)
+            if mm:
+                best = max(best, int(mm.group(1)))
+    return best
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    out_elems = 1
+    for _, dims in _dims(ins.shape_txt):
+        for d in dims:
+            out_elems *= d
+    ops = _OPERAND_RE.findall(ins.rest.split(",")[0] + ","
+                              + ins.rest.split(")")[0])
+    lhs_shape = comp.shapes.get(ops[0], "") if ops else ""
+    cm = _CONTRACT_RE.search(ins.rest)
+    k = 1
+    if cm and lhs_shape:
+        ds = _dims(lhs_shape)
+        if ds:
+            dims = ds[0][1]
+            for idx in [int(x) for x in cm.group(1).split(",") if x]:
+                if idx < len(dims):
+                    k *= dims[idx]
+    return 2.0 * out_elems * k
+
+
+def _operand_bytes(ins: Instr, comp: Computation) -> int:
+    total = 0
+    paren = ins.rest.split(")")[0]
+    for name in _OPERAND_RE.findall(paren):
+        if name in comp.shapes:
+            total += _bytes_of(comp.shapes[name])
+    return total
+
+
+def _operand_bytes_list(ins: Instr, comp: Computation) -> list:
+    out = []
+    paren = ins.rest.split(")")[0]
+    for name in _OPERAND_RE.findall(paren):
+        if name in comp.shapes:
+            out.append(_bytes_of(comp.shapes[name]))
+    return out
+
+
+def _instr_hbm_bytes(ins: Instr, comp: Computation) -> float:
+    """HBM traffic estimate for one top-level instruction.
+
+    Corrections for XLA:CPU artifacts that a TPU compile does not have
+    (all uniform across cells, so comparisons stay valid):
+      * convert — CPU legalizes bf16 compute as f32-with-whole-buffer
+        converts; bf16 is native on TPU -> skip;
+      * dynamic-(update-)slice and dus-fusions — scan carries update in
+        place (buffer aliasing); bill only the slice/update, not the
+        carried cache/param stack;
+      * other fusions — a fused dynamic-slice of a scanned, stacked
+        weight makes the whole (L, ...) stack an operand; cap per-operand
+        billing at max(4x result, 16 MiB) to bill the slice, not the
+        stack.
+    """
+    res = _bytes_of(ins.shape_txt)
+    if ins.op == "convert":
+        return 0.0
+    if ins.op == "dynamic-slice":
+        return 2.0 * res
+    if ins.op == "dynamic-update-slice":
+        ops = _operand_bytes_list(ins, comp)
+        upd = sum(ops) - max(ops) if ops else 0
+        return 2.0 * upd
+    if ins.op == "fusion":
+        ops = _operand_bytes_list(ins, comp)
+        if "dynamic_update_slice" in ins.rest or \
+                "dynamic-update-slice" in ins.rest:
+            big = max(ops) if ops else 0
+            return max(sum(ops) - big, 0) + max(res - big, 0)
+        cap = max(4.0 * res, 16 * 2 ** 20)
+        return res + sum(min(o, cap) for o in ops)
+    return res + _operand_bytes(ins, comp)
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float
+    hbm_bytes: float
+    coll_wire_bytes: float
+    coll_counts: dict
+    coll_bytes_by_kind: dict
+    dot_flops_by_comp: dict
+
+
+def analyze(hlo: str, n_devices_in_group: int = 1) -> HloStats:
+    comps = parse_computations(hlo)
+    entry = comps.pop("__entry__", None)
+    mult = _multipliers({**comps, "__entry__": entry})
+
+    # fusion bodies never touch HBM; remember which comps are fusion-called
+    fusion_bodies = set()
+    for comp in comps.values():
+        for ins in comp.instrs:
+            if ins.op == "fusion":
+                for cname in _CALL_RE.findall(ins.rest):
+                    fusion_bodies.add(cname)
+
+    flops = 0.0
+    hbm = 0.0
+    wire = 0.0
+    counts: dict = {}
+    by_kind: dict = {}
+    dot_by_comp: dict = {}
+
+    for comp in comps.values():
+        m = mult.get(comp.name, 0.0)
+        if m == 0.0:
+            continue
+        top_level = comp.name not in fusion_bodies
+        for ins in comp.instrs:
+            if ins.op == "dot":
+                f = _dot_flops(ins, comp) * m
+                flops += f
+                dot_by_comp[comp.name] = dot_by_comp.get(comp.name, 0.0) + f
+            if top_level and ins.op not in _SKIP_BYTES_OPS \
+                    and not ins.name.startswith("wrapped_") \
+                    and not ins.name.startswith("copy"):
+                # wrapped_* are XLA:CPU singleton-op fusions that a TPU
+                # compile fuses into neighbours; counting them (and bare
+                # copies) would bill the same buffer several times.
+                hbm += _instr_hbm_bytes(ins, comp) * m
+            kind = next((c for c in COLLECTIVES
+                         if ins.op == c or ins.op == c + "-start"), None)
+            if kind and not ins.op.endswith("-done"):
+                out_b = _bytes_of(ins.shape_txt)
+                g = n_devices_in_group
+                gm = _GROUPS_RE.search(ins.rest)
+                if gm:
+                    first = gm.group(1).strip("{}").split(",")
+                    g = max(len([x for x in first if x.strip()]), 1)
+                else:
+                    gm2 = _GROUPS_ID_RE.search(ins.rest)
+                    if gm2:
+                        g = max(int(gm2.group(2)), 1)
+                if kind == "all-gather":
+                    w = (g - 1) / g * out_b
+                elif kind == "all-reduce":
+                    w = 2 * (g - 1) / g * out_b
+                elif kind == "reduce-scatter":
+                    w = (g - 1) * out_b     # in = out*g; (g-1)/g * in
+                elif kind == "all-to-all":
+                    w = (g - 1) / g * out_b
+                else:
+                    w = out_b
+                wire += w * m
+                counts[kind] = counts.get(kind, 0) + 1
+                by_kind[kind] = by_kind.get(kind, 0.0) + w * m
+
+    return HloStats(flops=flops, hbm_bytes=hbm, coll_wire_bytes=wire,
+                    coll_counts=counts, coll_bytes_by_kind=by_kind,
+                    dot_flops_by_comp=dot_by_comp)

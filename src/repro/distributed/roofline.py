@@ -1,0 +1,161 @@
+"""Roofline-term extraction from compiled XLA artifacts.
+
+Three terms per (arch x shape x mesh), all in seconds:
+
+  compute    = HLO_FLOPs / (chips * PEAK_FLOPS)
+  memory     = HLO_bytes / (chips * HBM_BW)
+  collective = wire_bytes / (chips * ICI_BW)
+
+HLO_FLOPs / HLO_bytes come from compiled.cost_analysis() (whole-program,
+all devices).  Wire bytes are parsed from the compiled HLO text: for each
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+we take the result shape and apply the ring-bandwidth formula with the
+replica-group size g:
+
+  all-gather        (g-1)/g * out_bytes
+  all-reduce        2 * (g-1)/g * bytes
+  reduce-scatter    (g-1)/g * in_bytes  (= out_bytes * g scaled back)
+  all-to-all        (g-1)/g * bytes
+  collective-permute  bytes
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI (assignment-given).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\S+))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_ID_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    bytes_by_kind: dict
+    wire_bytes_total: float    # summed over all devices
+
+    def per_device(self, n_devices: int) -> float:
+        return self.wire_bytes_total / max(n_devices, 1)
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> CollectiveStats:
+    counts: dict = {}
+    bytes_by_kind: dict = {}
+    wire_total = 0.0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shape_txt, kind = m.group(1), m.group(2)
+        out_bytes = _shape_bytes(shape_txt)
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = len([x for x in gm.group(1).split(",") if x.strip()])
+        else:
+            gm2 = _GROUPS_ID_RE.search(line)
+            g = int(gm2.group(2)) if gm2 else n_devices
+        g = max(g, 1)
+        if kind == "all-gather":
+            wire = (g - 1) / g * out_bytes
+        elif kind == "all-reduce":
+            wire = 2 * (g - 1) / g * out_bytes
+        elif kind == "reduce-scatter":
+            wire = (g - 1) / g * out_bytes * g
+        elif kind == "all-to-all":
+            wire = (g - 1) / g * out_bytes
+        else:  # collective-permute
+            wire = out_bytes
+        # result shape counts once per participating device group member;
+        # HLO is SPMD: one instruction executes on every device
+        wire_per_device = wire
+        counts[kind] = counts.get(kind, 0) + 1
+        bytes_by_kind[kind] = bytes_by_kind.get(kind, 0) + wire_per_device
+        wire_total += wire_per_device * n_devices
+    return CollectiveStats(counts, bytes_by_kind, wire_total)
+
+
+def roofline_terms(flops: float, bytes_accessed: float,
+                   coll: CollectiveStats, n_devices: int,
+                   links_per_chip: float = 1.0) -> dict:
+    compute_t = flops / (n_devices * PEAK_FLOPS)
+    memory_t = bytes_accessed / (n_devices * HBM_BW)
+    coll_t = coll.per_device(n_devices) / (ICI_BW * links_per_chip)
+    dominant = max((("compute", compute_t), ("memory", memory_t),
+                    ("collective", coll_t)), key=lambda kv: kv[1])[0]
+    return {"compute_s": compute_t, "memory_s": memory_t,
+            "collective_s": coll_t, "dominant": dominant}
+
+
+def analyze_hlo(hlo_text: str, n_devices: int):
+    """Loop-aware per-device stats (see hlo_analysis module docstring)."""
+    from . import hlo_analysis
+
+    return hlo_analysis.analyze(hlo_text, n_devices)
+
+
+def roofline_terms_per_device(flops: float, hbm_bytes: float,
+                              wire_bytes: float,
+                              links_per_chip: float = 1.0) -> dict:
+    """Terms from PER-DEVICE quantities (post-SPMD local accounting)."""
+    compute_t = flops / PEAK_FLOPS
+    memory_t = hbm_bytes / HBM_BW
+    coll_t = wire_bytes / (ICI_BW * links_per_chip)
+    dominant = max((("compute", compute_t), ("memory", memory_t),
+                    ("collective", coll_t)), key=lambda kv: kv[1])[0]
+    return {"compute_s": compute_t, "memory_s": memory_t,
+            "collective_s": coll_t, "dominant": dominant,
+            "roofline_bound_s": max(compute_t, memory_t, coll_t),
+            "compute_fraction_of_bound": compute_t / max(
+                compute_t, memory_t, coll_t, 1e-30)}
+
+
+def model_flops(cfg, n_tokens: int, train: bool) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE), D = tokens.
+
+    N counts forward-active parameters (excluding embeddings' gather);
+    factor 6 = fwd 2 + bwd 4; serving uses factor 2."""
+    from repro.models import lm as lmmod
+    from repro.models.module import count_params
+    from repro.configs.base import RunSpec
+
+    defs = lmmod.param_defs(cfg, RunSpec(tp=1))
+    total = count_params(defs)
+    emb = cfg.vocab * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    n_active = total - emb
+    if cfg.n_experts:
+        # experts contribute top_k/E of their weight count per token
+        expert = 3 * cfg.d_model * cfg.d_ff * cfg.n_experts * cfg.n_layers
+        n_active = n_active - expert \
+            + expert * cfg.moe_top_k / cfg.n_experts
+    factor = 6.0 if train else 2.0
+    return factor * n_active * n_tokens

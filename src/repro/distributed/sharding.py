@@ -1,0 +1,40 @@
+"""Sharding helpers usable with or without a mesh in context."""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def constrain(x, spec: P):
+    """with_sharding_constraint that degrades to identity off-mesh.
+
+    Model code calls this unconditionally; on a single CPU device (smoke
+    tests) there is no mesh and the constraint is a no-op, under
+    jax.set_mesh (dry-run / production) it pins layouts for GSPMD.
+    """
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty:
+        return x
+    # drop axes the current mesh does not define (e.g. 'pod' on single-pod)
+    # and axes that are Manual in this context (inside a partially-manual
+    # shard_map, e.g. the compressed-gradient pod axis) — constraints may
+    # only reference Auto/Explicit axes.
+    names = set()
+    for a in mesh.axis_names:
+        try:
+            t = mesh._name_to_type[a]
+        except Exception:
+            t = None
+        if t is None or "Manual" not in str(t):
+            names.add(a)
+
+    def keep(part):
+        if part is None:
+            return None
+        if isinstance(part, (tuple, list)):
+            kept = tuple(a for a in part if a in names)
+            return kept if kept else None
+        return part if part in names else None
+
+    spec = P(*(keep(a) for a in spec))
+    return jax.lax.with_sharding_constraint(x, spec)

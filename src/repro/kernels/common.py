@@ -1,0 +1,52 @@
+"""Shared helpers for the DEPAM Pallas kernels.
+
+All kernels target TPU (v5e: 16 MB VMEM/core, 128x128 MXU, 8x128 VPU lanes)
+and are validated on CPU with ``interpret=True``.  ``use_interpret()`` picks
+interpret mode automatically when no TPU is present so the same call sites
+work in tests, benchmarks and on real hardware.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import numpy as np
+
+
+@functools.cache
+def use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def pad_axis(x, axis: int, target: int):
+    """Zero-pad axis of ndarray/jnp array up to ``target`` length."""
+    pad = target - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    import jax.numpy as jnp
+
+    return jnp.pad(x, widths)
+
+
+def dft_matrices(n_in: int, nfft: int, window: np.ndarray,
+                 dtype=np.float32) -> tuple[np.ndarray, np.ndarray]:
+    """Window-folded real-DFT matrices.
+
+    Returns (C, S), each (n_in, n_bins) with
+      C[j, k] =  window[j] * cos(2 pi j k / nfft)
+      S[j, k] = -window[j] * sin(2 pi j k / nfft)
+    so that for a real frame f:  rfft(window*f, nfft) = f@C + 1j*(f@S).
+    """
+    n_bins = nfft // 2 + 1
+    j = np.arange(n_in)[:, None].astype(np.float64)
+    k = np.arange(n_bins)[None, :].astype(np.float64)
+    ang = 2.0 * np.pi * j * k / nfft
+    c = (window[:, None] * np.cos(ang)).astype(dtype)
+    s = (-window[:, None] * np.sin(ang)).astype(dtype)
+    return c, s

@@ -1,0 +1,214 @@
+"""Fused frame + window + real-DFT + power kernel (direct matmul form).
+
+TPU-native replacement for the CPU radix FFT in the paper's Scala/Spark
+chain: for the small analysis windows used by DEPAM (paper set 1:
+nfft = windowSize = 256, hop 128) a *direct* real-DFT as a matmul is
+MXU-shaped and fuses the whole per-frame chain —
+
+    frames -> window -> rfft -> |.|^2 -> density scale
+
+— into one pallas_call, so neither the frame matrix nor the complex
+spectrum ever round-trips through HBM.
+
+Frame extraction trick (requires hop | window_size, true for both paper
+parameter sets): with m = window_size/hop and H = reshape(x, (n_hops, hop)),
+frame i is rows i..i+m-1 of H.  Pass the m shifted views V_r = H[r:r+nf]
+(stacked, shape (m, nf, hop)) and fold the analysis window into the DFT
+matrices:
+
+    rfft(w * frame_i)[k] = sum_r V_r[i] @ Cw_r[:, k]  (+ i * ... Sw_r)
+
+so the kernel is m matmul-accumulates followed by a squared-magnitude and
+per-bin scale.  All matmul dims (hop, n_bins blocks) are chosen
+128-aligned for the MXU.
+
+Two variants:
+  * ``frame_psd_kernel``  — per-frame PSD (the LTSA-fine product),
+    grid (frame_blocks, bin_blocks).
+  * ``welch_psd_kernel``  — per-record Welch PSD with in-kernel frame
+    accumulation, grid (records, bin_blocks, frame_chunks); the per-frame
+    PSD never exists in HBM.  This is the beyond-paper fused variant
+    measured in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from . import common
+
+_PREC = jax.lax.Precision.HIGHEST
+
+
+def _views(x: jnp.ndarray, window_size: int, hop: int) -> jnp.ndarray:
+    """(..., n_samples) -> (m, ..., n_frames, hop) shifted hop-views."""
+    assert window_size % hop == 0, "fused kernel requires hop | window_size"
+    m = window_size // hop
+    n = x.shape[-1]
+    n_frames = (n - window_size) // hop + 1
+    n_hops = n // hop
+    h = x[..., : n_hops * hop].reshape(*x.shape[:-1], n_hops, hop)
+    return jnp.stack([h[..., r : r + n_frames, :] for r in range(m)], axis=0)
+
+
+def _fold_matrices(p, dtype=np.float32):
+    """Split window-folded DFT matrices by hop phase: (m, hop, n_bins)."""
+    from repro.core.windows import np_window
+
+    w = np_window(p.window, p.window_size)
+    c, s = common.dft_matrices(p.window_size, p.nfft, w, dtype=np.float64)
+    m = p.window_size // p.hop
+    c = c.reshape(m, p.hop, p.n_bins).astype(dtype)
+    s = s.reshape(m, p.hop, p.n_bins).astype(dtype)
+    return c, s
+
+
+def _bin_scale(p, extra: float = 1.0, dtype=np.float32) -> np.ndarray:
+    """Combined one-sided weight * density scale (* extra), (1, n_bins)."""
+    from repro.core.spectra import np_onesided_weights, periodogram_scale
+
+    w = np_onesided_weights(p.nfft)
+    return (w * periodogram_scale(p) * extra).astype(dtype)[None, :]
+
+
+# ----------------------------------------------------------------------
+# Variant 1: per-frame PSD
+# ----------------------------------------------------------------------
+
+def _frame_psd_body(v_ref, c_ref, s_ref, scale_ref, o_ref, *, m: int):
+    acc_r = jnp.zeros(o_ref.shape, dtype=jnp.float32)
+    acc_i = jnp.zeros(o_ref.shape, dtype=jnp.float32)
+    for r in range(m):  # static unroll over hop phases
+        v = v_ref[r]
+        acc_r += jnp.dot(v, c_ref[r], precision=_PREC,
+                         preferred_element_type=jnp.float32)
+        acc_i += jnp.dot(v, s_ref[r], precision=_PREC,
+                         preferred_element_type=jnp.float32)
+    o_ref[...] = (acc_r * acc_r + acc_i * acc_i) * scale_ref[0, :]
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2, 3, 4))
+def frame_psd(x: jnp.ndarray, p, block_frames: int = 256,
+              block_bins: int = 128, interpret: bool | None = None
+              ) -> jnp.ndarray:
+    """Per-frame one-sided PSD via the fused Pallas kernel.
+
+    x: (n_samples,) or (n_records, record_size)
+    returns (n_frames, n_bins) or (n_records, frames_per_record, n_bins).
+    """
+    if interpret is None:
+        interpret = common.use_interpret()
+    batched = x.ndim == 2
+    v = _views(x.astype(jnp.float32), p.window_size, p.hop)  # (m,[R,]nf,hop)
+    m = v.shape[0]
+    nf = v.shape[-2]
+    if batched:
+        n_rec = x.shape[0]
+        v = v.reshape(m, n_rec * nf, hop := p.hop)
+    total_frames = v.shape[1]
+
+    c, s = _fold_matrices(p)
+    scale = _bin_scale(p)
+
+    fpad = common.round_up(total_frames, block_frames)
+    bpad = common.round_up(p.n_bins, block_bins)
+    v = common.pad_axis(v, 1, fpad)
+    c = np.pad(c, ((0, 0), (0, 0), (0, bpad - p.n_bins)))
+    s = np.pad(s, ((0, 0), (0, 0), (0, bpad - p.n_bins)))
+    scale = np.pad(scale, ((0, 0), (0, bpad - p.n_bins)))
+
+    grid = (fpad // block_frames, bpad // block_bins)
+    out = pl.pallas_call(
+        functools.partial(_frame_psd_body, m=m),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, block_frames, p.hop), lambda i, k: (0, i, 0)),
+            pl.BlockSpec((m, p.hop, block_bins), lambda i, k: (0, 0, k)),
+            pl.BlockSpec((m, p.hop, block_bins), lambda i, k: (0, 0, k)),
+            pl.BlockSpec((1, block_bins), lambda i, k: (0, k)),
+        ],
+        out_specs=pl.BlockSpec((block_frames, block_bins),
+                               lambda i, k: (i, k)),
+        out_shape=jax.ShapeDtypeStruct((fpad, bpad), jnp.float32),
+        interpret=interpret,
+    )(v, jnp.asarray(c), jnp.asarray(s), jnp.asarray(scale))
+
+    out = out[:total_frames, : p.n_bins]
+    if batched:
+        out = out.reshape(n_rec, nf, p.n_bins)
+    return out
+
+
+# ----------------------------------------------------------------------
+# Variant 2: fused Welch (per-record mean PSD, frames never materialized)
+# ----------------------------------------------------------------------
+
+def _welch_body(v_ref, c_ref, s_ref, scale_ref, o_ref, *, m: int):
+    f = pl.program_id(2)
+
+    @pl.when(f == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    acc_r = None
+    acc_i = None
+    for r in range(m):
+        v = v_ref[r, 0]  # (chunk_frames, hop)
+        cr = jnp.dot(v, c_ref[r], precision=_PREC,
+                     preferred_element_type=jnp.float32)
+        ci = jnp.dot(v, s_ref[r], precision=_PREC,
+                     preferred_element_type=jnp.float32)
+        acc_r = cr if acc_r is None else acc_r + cr
+        acc_i = ci if acc_i is None else acc_i + ci
+    psd = acc_r * acc_r + acc_i * acc_i            # (chunk_frames, bins)
+    o_ref[...] += jnp.sum(psd, axis=0, keepdims=True) * scale_ref[0, :]
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2, 3, 4))
+def welch_psd(records: jnp.ndarray, p, chunk_frames: int = 512,
+              block_bins: int = 128, interpret: bool | None = None
+              ) -> jnp.ndarray:
+    """Per-record Welch PSD, (n_records, record_size) -> (n_records, n_bins).
+
+    The frame axis is reduced inside the kernel (grid axis 2, innermost) so
+    per-frame spectra never hit HBM — HBM traffic is m * signal + output.
+    """
+    if interpret is None:
+        interpret = common.use_interpret()
+    assert records.ndim == 2
+    n_rec = records.shape[0]
+    v = _views(records.astype(jnp.float32), p.window_size, p.hop)
+    m, _, fpr, hop = v.shape
+
+    c, s = _fold_matrices(p)
+    scale = _bin_scale(p, extra=1.0 / fpr)  # fold the Welch mean in
+
+    chunk_frames = min(chunk_frames, common.round_up(fpr, 8))
+    fpad = common.round_up(fpr, chunk_frames)
+    bpad = common.round_up(p.n_bins, block_bins)
+    v = common.pad_axis(v, 2, fpad)
+    c = np.pad(c, ((0, 0), (0, 0), (0, bpad - p.n_bins)))
+    s = np.pad(s, ((0, 0), (0, 0), (0, bpad - p.n_bins)))
+    scale = np.pad(scale, ((0, 0), (0, bpad - p.n_bins)))
+
+    grid = (n_rec, bpad // block_bins, fpad // chunk_frames)
+    out = pl.pallas_call(
+        functools.partial(_welch_body, m=m),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, 1, chunk_frames, hop),
+                         lambda r, k, f: (0, r, f, 0)),
+            pl.BlockSpec((m, hop, block_bins), lambda r, k, f: (0, 0, k)),
+            pl.BlockSpec((m, hop, block_bins), lambda r, k, f: (0, 0, k)),
+            pl.BlockSpec((1, block_bins), lambda r, k, f: (0, k)),
+        ],
+        out_specs=pl.BlockSpec((1, block_bins), lambda r, k, f: (r, k)),
+        out_shape=jax.ShapeDtypeStruct((n_rec, bpad), jnp.float32),
+        interpret=interpret,
+    )(v, jnp.asarray(c), jnp.asarray(s), jnp.asarray(scale))
+
+    return out[:, : p.n_bins]

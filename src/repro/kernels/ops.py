@@ -1,0 +1,54 @@
+"""Public jit'd entry points for the DEPAM kernels, with dispatch.
+
+``psd_backend`` picks the right kernel for a parameter set:
+  * direct   — fused frame+window+DFT matmul (framepsd), nfft <= 512 and
+               hop | windowSize.  Paper set 1.
+  * ct       — two-stage Cooley-Tukey matmul (ct_rfft) for large pow2 nfft.
+               Paper set 2.
+  * xla      — core.spectra fallback (jnp.fft) for anything else.
+
+All kernels auto-select interpret mode off-TPU (kernels.common).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import spectra
+from . import ct_rfft, framepsd, tol as tol_kernel, welch as welch_kernel
+
+
+def psd_backend(p) -> str:
+    if p.nfft <= 512 and p.window_size % p.hop == 0:
+        return "direct"
+    if p.nfft >= 1024 and (p.nfft & (p.nfft - 1)) == 0:
+        return "ct"
+    return "xla"
+
+
+def frame_psd(x: jnp.ndarray, p, backend: str | None = None) -> jnp.ndarray:
+    """Per-frame PSD. x: (n_samples,) or (n_records, record_size)."""
+    backend = backend or psd_backend(p)
+    if backend == "direct":
+        return framepsd.frame_psd(x, p)
+    if backend == "ct":
+        frames = spectra.frame_signal(x, p.window_size, p.hop)
+        shape = frames.shape
+        out = ct_rfft.ct_frame_psd(frames.reshape(-1, p.window_size), p)
+        return out.reshape(*shape[:-1], p.n_bins)
+    return spectra.frame_psd(x, p)
+
+
+def welch_psd(records: jnp.ndarray, p, backend: str | None = None
+              ) -> jnp.ndarray:
+    """Per-record Welch PSD. records: (n_records, record_size)."""
+    backend = backend or psd_backend(p)
+    if backend == "direct":
+        return framepsd.welch_psd(records, p)
+    if backend == "ct":
+        fp = frame_psd(records, p, backend="ct")
+        return welch_kernel.welch_mean(fp)
+    return spectra.welch_psd(records, p)
+
+
+def tol_levels(psd: jnp.ndarray, band_matrix: jnp.ndarray, p) -> jnp.ndarray:
+    return tol_kernel.tol_levels(psd, band_matrix, p)

@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for every DEPAM kernel (scipy-welch-compatible).
+
+These delegate to repro.core.spectra, which is itself validated against
+scipy.signal.welch to ~1e-16 relative RMSE in float64 (the paper's own
+cross-implementation contract between Scala, Matlab and Python versions).
+Kernel tests sweep shapes/dtypes and assert_allclose against these.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import spectra
+
+
+def frame_psd(x: jnp.ndarray, p) -> jnp.ndarray:
+    return spectra.frame_psd(x, p)
+
+
+def welch_psd(records: jnp.ndarray, p) -> jnp.ndarray:
+    return spectra.welch_psd(records, p)
+
+
+def ct_frame_psd(frames: jnp.ndarray, p) -> jnp.ndarray:
+    """Oracle for the CT kernel: PSD of pre-framed, pre-extracted frames."""
+    from repro.core.windows import make_window
+
+    w = make_window(p.window, p.window_size, dtype=frames.dtype)
+    spec = jnp.fft.rfft(frames * w, n=p.nfft, axis=-1)
+    power = jnp.real(spec) ** 2 + jnp.imag(spec) ** 2
+    scale = jnp.asarray(spectra.periodogram_scale(p), frames.dtype)
+    return power * scale * spectra.onesided_weights(p.nfft, frames.dtype)
+
+
+def welch_mean(frame_psd_: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean(frame_psd_, axis=1)
+
+
+def tol_levels(psd: jnp.ndarray, band_matrix: jnp.ndarray, p) -> jnp.ndarray:
+    return spectra.tol_levels(psd, band_matrix, p)

@@ -1,0 +1,120 @@
+"""Structural (BlockSpec-derived) roofline model for the DEPAM kernels.
+
+Pallas kernels in interpret mode lower to host callbacks, so the HLO
+analyzer cannot see inside them; per the dry-run methodology we reason
+about them STRUCTURALLY instead: given the grid and BlockSpecs, every
+(grid cell x input block) is one HBM->VMEM transfer, every output block
+one VMEM->HBM transfer, and the matmul FLOPs follow from the block shapes.
+This is exact for the data movement the kernel *requests*; on real
+hardware Mosaic's double buffering hides latency but moves the same bytes.
+
+Used by benchmarks/depam_roofline.py for the block-size hillclimb of
+EXPERIMENTS.md §Perf (cell 3: the paper's own workload).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.distributed.roofline import HBM_BW, PEAK_FLOPS
+
+VMEM_BYTES = 16 * 2 ** 20     # v5e per-core VMEM
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelCost:
+    hbm_bytes: float
+    flops: float
+    vmem_bytes: int
+    grid: tuple
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def bound(self) -> str:
+        return "compute" if self.compute_s >= self.memory_s else "memory"
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        return self.flops / max(self.hbm_bytes, 1.0)
+
+    def fits_vmem(self) -> bool:
+        return self.vmem_bytes <= VMEM_BYTES
+
+
+def welch_fused_cost(n_records: int, frames_per_record: int, p,
+                     chunk_frames: int = 512, block_bins: int = 128,
+                     dtype_bytes: int = 4) -> KernelCost:
+    """framepsd.welch_psd: grid (R, bins/Bk, F/Fc)."""
+    m = p.window_size // p.hop
+    hop = p.hop
+    nb = -(-p.n_bins // block_bins)
+    fc = min(chunk_frames, frames_per_record)
+    nf = -(-frames_per_record // fc)
+    grid = (n_records, nb, nf)
+
+    v_block = m * fc * hop * dtype_bytes
+    cs_block = 2 * m * hop * block_bins * dtype_bytes
+    out_block = block_bins * dtype_bytes
+    # per grid cell: V block + C/S blocks (re-read per (r, k) revisit),
+    # output written once per (r, k) at the last frame chunk
+    reads = grid[0] * grid[1] * grid[2] * (v_block + cs_block)
+    writes = grid[0] * grid[1] * out_block
+    flops = (4.0 * m * hop * block_bins * fc          # 2 matmuls
+             * grid[0] * grid[1] * grid[2])
+    vmem = v_block + cs_block + out_block
+    return KernelCost(reads + writes, flops, vmem, grid)
+
+
+def frame_psd_cost(n_frames: int, p, block_frames: int = 256,
+                   block_bins: int = 128, dtype_bytes: int = 4
+                   ) -> KernelCost:
+    """framepsd.frame_psd (unfused: per-frame PSD materialized)."""
+    m = p.window_size // p.hop
+    hop = p.hop
+    nfb = -(-n_frames // block_frames)
+    nb = -(-p.n_bins // block_bins)
+    grid = (nfb, nb)
+    v_block = m * block_frames * hop * dtype_bytes
+    cs_block = 2 * m * hop * block_bins * dtype_bytes
+    out_block = block_frames * block_bins * dtype_bytes
+    reads = grid[0] * grid[1] * (v_block + cs_block)
+    writes = grid[0] * grid[1] * out_block
+    flops = 4.0 * m * hop * block_bins * block_frames * grid[0] * grid[1]
+    vmem = v_block + cs_block + out_block
+    return KernelCost(reads + writes, flops, vmem, grid)
+
+
+def ct_cost(n_frames: int, p, n1: int = 64, block_frames: int = 32,
+            dtype_bytes: int = 4) -> KernelCost:
+    """ct_rfft.ct_frame_psd: grid (frames/Bf,)."""
+    nfft = p.nfft
+    n2 = nfft // n1
+    n2h = n2 // 2 + 1
+    nfb = -(-n_frames // block_frames)
+    grid = (nfb,)
+    const_bytes = (n1 * n2 + 2 * n1 * n1 + 2 * n1 * n2
+                   + 2 * n2 * n2h + n2h * n1) * dtype_bytes
+    in_block = block_frames * nfft * dtype_bytes
+    out_block = block_frames * n2h * n1 * dtype_bytes
+    reads = nfb * (in_block + const_bytes)
+    writes = nfb * out_block
+    # stage1: 2 real matmuls (n1 x n1 x n2); stage2: 4 (n1 x n2 x n2h)
+    flops = (2 * 2 * n1 * n1 * n2 + 4 * 2 * n1 * n2 * n2h + 6 * n1 * n2) \
+        * block_frames * nfb
+    # intermediates: A + Yr/Yi + Zr/Zi + out
+    vmem = in_block + const_bytes + out_block \
+        + 5 * block_frames * n1 * n2 * dtype_bytes
+    return KernelCost(reads + writes, flops, vmem, grid)
+
+
+def direct_cost(n_frames: int, p, block_frames: int = 64,
+                block_bins: int = 128, dtype_bytes: int = 4) -> KernelCost:
+    """Direct DFT matmul at large nfft (the naive alternative to CT)."""
+    return frame_psd_cost(n_frames, p, block_frames, block_bins,
+                          dtype_bytes)

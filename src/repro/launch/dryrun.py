@@ -1,0 +1,214 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+DOC = """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any other import (jax locks the device
+count at first init).  512 host devices back both the (16,16) single-pod
+mesh and the (2,16,16) multi-pod mesh.
+
+Per cell this driver:
+  1. builds the abstract train state / params / caches (ShapeDtypeStruct —
+     no allocation, which is how a 480B-param config lowers on a CPU host);
+  2. jit-lowers train_step / prefill / serve_step with the production
+     shardings and compiles it;
+  3. records memory_analysis() (proves fit), cost_analysis() (FLOPs/bytes)
+     and the parsed collective wire bytes -> roofline terms;
+  4. appends a JSON record to results/dryrun/<cell>.json.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen1.5-0.5b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--arch-filter moe]
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+import repro.configs as configs
+from repro.distributed import roofline
+from repro.launch import mesh as meshlib, shapes as shapeslib
+from repro.models import lm, module
+from repro.optim import adamw
+from repro.train import step as trainstep
+
+
+FSDP_SERVE_THRESHOLD = 8e9   # bytes/device of TP-only bf16 params
+
+
+def _abstract_params(cfg, rt, mesh, data_size):
+    """bf16 compute params for serving cells.
+
+    TP-only sharding when the per-device footprint fits (no per-token
+    weight gathers); FSDP(+TP) via the ZeRO spec transform only when a
+    TP-only layout would not fit HBM (arctic-480b: 60 GB/device TP-only).
+    Measured: FSDP-by-default made every decode cell collective-bound on
+    per-token parameter all-gathers — see EXPERIMENTS.md §Perf iter 5."""
+    defs = lm.param_defs(cfg, rt)
+    tp_bytes = 2 * module.count_params(defs) / mesh.shape["model"]
+    if tp_bytes > FSDP_SERVE_THRESHOLD:
+        defs = adamw.opt_defs(defs, meshlib.data_axes(mesh),
+                              data_size)["master"]
+    shapes = module.abstract(defs, dtype=jnp.bfloat16)
+    specs = module.pspecs(defs)
+    return jax.tree.map(
+        lambda s, p: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, p)),
+        shapes, specs)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               rt_override=None, collect_hlo: bool = False,
+               compress: bool = False):
+    mesh = meshlib.make_production_mesh(multi_pod=multi_pod)
+    cfg = configs.get(arch)
+    shape = shapeslib.SHAPES[shape_name]
+    if not shapeslib.applicable(cfg, shape):
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped",
+                "reason": "long_500k needs sub-quadratic attention; "
+                          f"{cfg.family} is full-attention"}
+    rt = rt_override or shapeslib.runspec_for(cfg, shape, mesh)
+    dsize = meshlib.data_size(mesh)
+    n_dev = mesh.size
+    t0 = time.time()
+
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            defs = lm.param_defs(cfg, rt)
+            n_pods = mesh.shape.get("pod", 0) if compress else 0
+            state_sds, state_ps = trainstep.abstract_train_state(
+                defs, meshlib.data_axes(mesh), dsize, n_pods=n_pods)
+            state = jax.tree.map(
+                lambda s, p: jax.ShapeDtypeStruct(
+                    s.shape, s.dtype, sharding=NamedSharding(mesh, p)),
+                state_sds, state_ps,
+                is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+            batch = shapeslib.input_specs(cfg, shape, mesh)
+            opt_cfg = adamw.AdamWConfig()
+            fn = trainstep.make_train_step(
+                cfg, rt, opt_cfg, batch_axes=meshlib.data_axes(mesh),
+                compress_pod_axis="pod" if compress else None, mesh=mesh)
+            lowered = jax.jit(fn, donate_argnums=(0,)).lower(state, batch)
+            n_tokens = shape.batch * shape.seq
+            mf = roofline.model_flops(cfg, n_tokens, train=True)
+        elif shape.kind == "prefill":
+            params = _abstract_params(cfg, rt, mesh, dsize)
+            batch = shapeslib.input_specs(cfg, shape, mesh)
+
+            def prefill_fn(p, b):
+                return lm.prefill(p, b, cfg, rt, shape.seq)
+
+            lowered = jax.jit(prefill_fn).lower(params, batch)
+            n_tokens = shape.batch * shape.seq
+            mf = roofline.model_flops(cfg, n_tokens, train=False)
+        else:  # decode
+            params = _abstract_params(cfg, rt, mesh, dsize)
+            inp = shapeslib.input_specs(cfg, shape, mesh)
+
+            def serve_step(p, tokens, caches, pos):
+                return lm.decode_step(p, tokens, caches, pos, cfg, rt,
+                                      mesh=mesh)
+
+            lowered = jax.jit(serve_step, donate_argnums=(2,)).lower(
+                params, inp["tokens"], inp["caches"], inp["pos"])
+            n_tokens = shape.batch
+            mf = roofline.model_flops(cfg, n_tokens, train=False)
+
+        compiled = lowered.compile()
+
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_info = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        }
+    except Exception:
+        mem_info = {}
+
+    # loop-aware static analysis (see distributed/hlo_analysis.py):
+    # XLA's own cost_analysis counts while bodies once, which undercounts
+    # scanned stacks by ~L; the parsed numbers below carry trip counts.
+    hlo = compiled.as_text()
+    st = roofline.analyze_hlo(hlo, n_dev)
+    terms = roofline.roofline_terms_per_device(
+        st.flops, st.hbm_bytes, st.coll_wire_bytes)
+    mf_per_dev = mf / n_dev
+
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "status": "ok", "n_devices": n_dev,
+        "compile_s": round(time.time() - t0, 1),
+        "flops_per_device": st.flops,
+        "hbm_bytes_per_device": st.hbm_bytes,
+        "collective_wire_bytes_per_device": st.coll_wire_bytes,
+        "collective_counts": st.coll_counts,
+        "collective_bytes_by_kind": st.coll_bytes_by_kind,
+        "xla_cost_analysis": {"flops": cost.get("flops"),
+                              "bytes_accessed": cost.get("bytes accessed")},
+        "memory": mem_info,
+        "model_flops_total": mf,
+        "model_flops_per_device": mf_per_dev,
+        "useful_flops_ratio": mf_per_dev / st.flops if st.flops else None,
+        **terms,
+    }
+    if collect_hlo:
+        rec["_hlo"] = hlo
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    cells = []
+    archs = configs.ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(shapeslib.SHAPES) if (args.all or not args.shape) \
+        else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for m in meshes:
+                cells.append((a, s, m))
+
+    os.makedirs(args.out, exist_ok=True)
+    for arch, shape, mp in cells:
+        tag = f"{arch}__{shape}__{'multi' if mp else 'single'}"
+        path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(path):
+            print(f"[skip] {tag} (exists)")
+            continue
+        print(f"[dryrun] {tag} ...", flush=True)
+        try:
+            rec = lower_cell(arch, shape, mp)
+        except Exception as e:
+            rec = {"arch": arch, "shape": shape,
+                   "mesh": "multi" if mp else "single",
+                   "status": "error", "error": f"{type(e).__name__}: {e}",
+                   "trace": traceback.format_exc()[-2000:]}
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"  -> {rec['status']}"
+              + (f" dominant={rec.get('dominant')}" if rec.get("status") == "ok" else ""),
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Serving driver: batched prefill + decode loop at smoke scale.
+
+Demonstrates the full serving path (prompt batch -> prefill -> N decode
+steps with the flash-decode cache) on CPU; the same step functions lower
+on the production mesh in dryrun.py.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
+      --reduced --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as configs
+from repro.configs.base import RunSpec
+from repro.models import lm, module
+
+
+def run(arch: str, reduced: bool, batch: int, prompt_len: int, gen: int,
+        seed: int = 0, greedy: bool = True):
+    cfg = configs.get(arch, reduced=reduced)
+    rt = RunSpec(tp=1, remat="none", attn_chunk=512)
+    params = module.init(jax.random.PRNGKey(seed), lm.param_defs(cfg, rt))
+    s_max = prompt_len + gen + (cfg.n_frontend_tokens
+                                if cfg.family == "vlm" else 0)
+
+    key = jax.random.PRNGKey(seed + 1)
+    batch_d = {"tokens": jax.random.randint(key, (batch, prompt_len), 0,
+                                            cfg.vocab)}
+    if cfg.family == "vlm":
+        batch_d["patches"] = jax.random.normal(
+            key, (batch, cfg.n_frontend_tokens, cfg.frontend_dim))
+    if cfg.family == "audio":
+        batch_d["frames"] = jax.random.normal(
+            key, (batch, prompt_len * 4, cfg.frontend_dim))
+
+    prefill = jax.jit(lambda p, b: lm.prefill(p, b, cfg, rt, s_max))
+    decode = jax.jit(
+        lambda p, t, c, pos: lm.decode_step(p, t, c, pos, cfg, rt))
+
+    t0 = time.time()
+    logits, caches = prefill(params, batch_d)
+    toks = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    out = [toks]
+    base = prompt_len + (cfg.n_frontend_tokens if cfg.family == "vlm" else 0)
+    for i in range(gen - 1):
+        logits, caches = decode(params, toks, caches,
+                                jnp.int32(base + i), )
+        toks = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        out.append(toks)
+    gen_toks = jnp.concatenate(out, axis=1)
+    dt = time.time() - t0
+    print(f"[serve] {cfg.name}: batch={batch} prompt={prompt_len} "
+          f"gen={gen} in {dt:.2f}s "
+          f"({batch * gen / dt:.1f} tok/s incl. compile)")
+    return gen_toks
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    a = ap.parse_args()
+    toks = run(a.arch, a.reduced, a.batch, a.prompt_len, a.gen)
+    print("[serve] sample token ids:", toks[0, :10].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,159 @@
+"""Assigned input shapes x runtime policy per architecture.
+
+Four shapes per the assignment (LM transformer shapes are
+seq_len x global_batch):
+
+  train_4k     seq=4,096   batch=256  -> lowers train_step
+  prefill_32k  seq=32,768  batch=32   -> lowers prefill (serve)
+  decode_32k   seq=32,768  batch=128  -> lowers serve_step (1 new token
+                                         against a seq_len KV cache)
+  long_500k    seq=524,288 batch=1    -> serve_step; ONLY for sub-quadratic
+                                         families (ssm, hybrid) — skipped
+                                         with a note for full-attention
+                                         archs (see DESIGN.md §5)
+
+Enc-dec policy (seamless): shapes give the ENCODER length; the decoder
+runs seq/4 for train/prefill and one token at decode.
+VLM policy (internvl2): shapes give the total backbone sequence; 256 of
+those positions are image tokens from the ViT stub.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, RunSpec
+from repro.models import lm
+from . import mesh as meshlib
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+# gradient-accumulation factor for train_4k, sized so remat'd activations
+# fit a 16 GB v5e alongside params + ZeRO-1 state (napkin math in DESIGN.md)
+MICROBATCHES = {
+    "minicpm3-4b": 8, "internlm2-20b": 16, "starcoder2-7b": 8,
+    "qwen1.5-0.5b": 1, "arctic-480b": 16, "qwen3-moe-30b-a3b": 4,
+    "internvl2-1b": 1, "zamba2-1.2b": 4, "mamba2-2.7b": 8,
+    "seamless-m4t-large-v2": 2,
+}
+
+
+def applicable(cfg: ModelConfig, shape: ShapeSpec) -> bool:
+    if shape.name == "long_500k":
+        return cfg.supports_long_context
+    return True
+
+
+def runspec_for(cfg: ModelConfig, shape: ShapeSpec, mesh) -> RunSpec:
+    tp = mesh.shape["model"] if mesh is not None else 1
+    dp = meshlib.data_size(mesh) if mesh is not None else 1
+    mb = MICROBATCHES.get(cfg.name, 1) if shape.kind == "train" else 1
+    return RunSpec(tp=tp, dp=dp,
+                   remat="block" if shape.kind == "train" else "none",
+                   microbatches=mb, attn_chunk=1024)
+
+
+def _sds(shape, dtype, mesh, spec):
+    sharding = NamedSharding(mesh, spec) if mesh is not None else None
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                dtype=jnp.bfloat16):
+    """Abstract batch pytree (ShapeDtypeStructs with shardings) for a cell.
+
+    train/prefill -> the batch dict; decode -> (tokens, caches, pos).
+    """
+    b, s = shape.batch, shape.seq
+    dp = meshlib.data_axes(mesh) if mesh is not None else None
+    bspec = P(dp)
+    b2 = P(dp, None)
+
+    def toks(bb, ss):
+        return _sds((bb, ss), jnp.int32, mesh, b2)
+
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "vlm":
+            s_text = s - cfg.n_frontend_tokens
+            batch = {"tokens": toks(b, s_text),
+                     "patches": _sds((b, cfg.n_frontend_tokens,
+                                      cfg.frontend_dim), dtype, mesh,
+                                     P(dp, None, None)),
+                     "labels": toks(b, s_text),
+                     "mask": _sds((b, s_text), jnp.float32, mesh, b2)}
+        elif cfg.family == "audio":
+            s_dec = max(s // 4, 8)
+            batch = {"frames": _sds((b, s, cfg.frontend_dim), dtype, mesh,
+                                    P(dp, None, None)),
+                     "tokens": toks(b, s_dec),
+                     "labels": toks(b, s_dec),
+                     "mask": _sds((b, s_dec), jnp.float32, mesh, b2)}
+        else:
+            batch = {"tokens": toks(b, s), "labels": toks(b, s),
+                     "mask": _sds((b, s), jnp.float32, mesh, b2)}
+        if shape.kind == "prefill":
+            batch = {k: v for k, v in batch.items()
+                     if k not in ("labels", "mask")}
+        return batch
+
+    # decode: (tokens, caches, pos)
+    rt = runspec_for(cfg, shape, mesh)
+    cache_sds, cache_ps = lm.cache_specs(cfg, rt, b, s, dtype, mesh,
+                                         enc_len=s)
+    if mesh is not None:
+        caches = jax.tree.map(
+            lambda sd, ps: jax.ShapeDtypeStruct(
+                sd.shape, sd.dtype, sharding=NamedSharding(mesh, ps)),
+            cache_sds, cache_ps,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    else:
+        caches = cache_sds
+    dp_b, _ = (None, None) if mesh is None else \
+        (P(dp) if b % max(meshlib.data_size(mesh), 1) == 0 else P(None),
+         None)
+    tokens = _sds((b, 1), jnp.int32, mesh,
+                  dp_b if dp_b is not None else P(None, None))
+    pos = _sds((), jnp.int32, mesh, P())
+    return {"tokens": tokens, "caches": caches, "pos": pos}
+
+
+def concrete_batch(cfg: ModelConfig, shape: ShapeSpec, key=0,
+                   dtype=jnp.float32):
+    """Small REAL batch with the same structure (for smoke runs)."""
+    k = jax.random.PRNGKey(key)
+    b, s = shape.batch, shape.seq
+    if cfg.family == "vlm":
+        s_text = s - cfg.n_frontend_tokens
+        return {"tokens": jax.random.randint(k, (b, s_text), 0, cfg.vocab),
+                "patches": jax.random.normal(
+                    k, (b, cfg.n_frontend_tokens, cfg.frontend_dim), dtype),
+                "labels": jax.random.randint(k, (b, s_text), 0, cfg.vocab),
+                "mask": jnp.ones((b, s_text), jnp.float32)}
+    if cfg.family == "audio":
+        s_dec = max(s // 4, 8)
+        return {"frames": jax.random.normal(k, (b, s, cfg.frontend_dim),
+                                            dtype),
+                "tokens": jax.random.randint(k, (b, s_dec), 0, cfg.vocab),
+                "labels": jax.random.randint(k, (b, s_dec), 0, cfg.vocab),
+                "mask": jnp.ones((b, s_dec), jnp.float32)}
+    toks = jax.random.randint(k, (b, s), 0, cfg.vocab)
+    return {"tokens": toks, "labels": jnp.roll(toks, -1, 1),
+            "mask": jnp.ones((b, s), jnp.float32)}

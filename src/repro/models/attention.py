@@ -1,0 +1,460 @@
+"""Attention: GQA/MHA/MLA, memory-efficient prefill, sharded flash-decode.
+
+Sharding strategy (mesh ('data','model'), activations batch over 'data'):
+
+* train / prefill — q heads are zero-padded to a multiple of tp and sharded
+  over 'model'; GQA kv heads are expanded to the q-head count by *weight
+  tiling* (an exact transformation: k/v for q head h come from logical kv
+  head h // group).  Every head tensor then shards evenly for ANY assigned
+  head count (40, 56, 36, 14 ... heads on a 16-way model axis).  The FLOP
+  overhead of tiled kv projections is visible — deliberately — in the
+  MODEL_FLOPS/HLO_FLOPs ratio of EXPERIMENTS.md §Roofline.
+
+* decode — the KV cache keeps LOGICAL kv heads and is sharded over 'model'
+  on the *sequence* axis (a 32k-token cache does not fit replicated).
+  Attention runs as a flash-decode shard_map: each model shard computes
+  partial scores over its sequence slice; shards combine with the
+  numerically exact (max, sum, weighted-value) reduction — two psums.
+  This is the TPU analogue of flash-decoding / context-parallel serving.
+
+Memory-efficient prefill attention scans over KV chunks with an online
+softmax so peak score memory is (S_q * chunk), never (S_q * S_kv).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, RunSpec
+from repro.distributed.sharding import constrain
+from .module import ParamDef
+from .layers import apply_rope, rope_angles
+
+NEG_INF = -1e30
+
+# activation layouts (batch over data axes, heads over model)
+_BH = P(("pod", "data"), None, "model", None)     # (B, S, H, hd)
+_BHS = P(("pod", "data"), "model", None)          # (B, H, S)
+_BHSD = P(("pod", "data"), "model", None, None)   # (B, H, S, hd)
+_KV = P(("pod", "data"), None, None, None)        # (B, S, KV, hd) replicated
+
+
+# ---------------------------------------------------------------- params
+def attn_defs(cfg: ModelConfig, rt: RunSpec, cross: bool = False) -> dict:
+    d, hd = cfg.d_model, cfg.hd
+    hp = rt.padded_heads(cfg.n_heads)
+    if cfg.mla and not cross:
+        rope, nope, vd = cfg.qk_rope_dim, cfg.qk_nope_dim, cfg.v_head_dim
+        return {
+            "wq_a": ParamDef((d, cfg.q_lora_rank), P(None, None)),
+            "q_norm": ParamDef((cfg.q_lora_rank,), P(), init="ones"),
+            "wq_b": ParamDef((cfg.q_lora_rank, hp, nope + rope),
+                             P(None, "model", None)),
+            "wkv_a": ParamDef((d, cfg.kv_lora_rank + rope), P(None, None)),
+            "kv_norm": ParamDef((cfg.kv_lora_rank,), P(), init="ones"),
+            "wkv_b": ParamDef((cfg.kv_lora_rank, hp, nope + vd),
+                              P(None, "model", None)),
+            "wo": ParamDef((hp, vd, d), P("model", None, None)),
+        }
+    # kv heads shard over 'model' when divisible (MHA and friendly GQA);
+    # otherwise replicate — the kv projection is then redundantly computed
+    # per shard, which the useful-FLOPs ratio surfaces (see DESIGN.md).
+    kv_shard = "model" if cfg.n_kv_heads % max(rt.tp, 1) == 0 else None
+    defs = {
+        "wq": ParamDef((d, hp, hd), P(None, "model", None)),
+        "wk": ParamDef((d, cfg.n_kv_heads, hd), P(None, kv_shard, None)),
+        "wv": ParamDef((d, cfg.n_kv_heads, hd), P(None, kv_shard, None)),
+        "wo": ParamDef((hp, hd, d), P("model", None, None)),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = ParamDef((hp, hd), P("model", None), init="zeros")
+        defs["bk"] = ParamDef((cfg.n_kv_heads, hd), P(kv_shard, None),
+                              init="zeros")
+        defs["bv"] = ParamDef((cfg.n_kv_heads, hd), P(kv_shard, None),
+                              init="zeros")
+    if cfg.attn_out_bias:
+        defs["bo"] = ParamDef((d,), P(), init="zeros")
+    if cfg.qk_norm:
+        defs["qn"] = ParamDef((hd,), P(), init="ones")
+        defs["kn"] = ParamDef((hd,), P(), init="ones")
+    return defs
+
+
+def kv_map(cfg: ModelConfig, rt: RunSpec) -> jnp.ndarray:
+    """Logical kv head for each padded q head (pad heads -> kv 0)."""
+    hp = rt.padded_heads(cfg.n_heads)
+    group = cfg.n_heads // cfg.n_kv_heads
+    m = [min(h // group, cfg.n_kv_heads - 1) if h < cfg.n_heads else 0
+         for h in range(hp)]
+    return jnp.asarray(m, jnp.int32)
+
+
+def _rms(x, scale, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    r = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * r * scale).astype(x.dtype)
+
+
+# ----------------------------------------------- chunked online-softmax
+def chunked_attention(q, k, v, *, causal: bool, q_offset=0,
+                      chunk: int = 1024, scale: float | None = None):
+    """q (B,S,H,D); k,v (B,T,H,D) -> (B,S,H,D); O(S*chunk) score memory."""
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    qf = q.astype(jnp.float32) * scale
+
+    if t <= max(chunk, 2048):  # small kv: one shot
+        sc = jnp.einsum("bshd,bthd->bhst", qf, k.astype(jnp.float32))
+        sc = constrain(sc, P(("pod", "data"), "model", None, None))
+        if causal:
+            qpos = jnp.arange(s)[:, None] + q_offset
+            sc = jnp.where(qpos >= jnp.arange(t)[None, :], sc, NEG_INF)
+        p = jax.nn.softmax(sc, axis=-1)
+        return jnp.einsum("bhst,bthd->bshd", p,
+                          v.astype(jnp.float32)).astype(q.dtype)
+
+    n = -(-t // chunk)
+    tp_ = n * chunk
+    pad = tp_ - t
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    ks = jnp.moveaxis(kp.reshape(b, n, chunk, h, d), 1, 0)
+    vs = jnp.moveaxis(vp.reshape(b, n, chunk, h, d), 1, 0)
+    qpos = jnp.arange(s)[:, None] + q_offset
+
+    def body(carry, inp):
+        m, l, o = carry
+        kc, vc, ci = inp
+        kpos = ci * chunk + jnp.arange(chunk)
+        sc = jnp.einsum("bshd,bthd->bhst", qf, kc.astype(jnp.float32))
+        # pin the score layout: without this GSPMD sometimes re-shards the
+        # scan carries each iteration (measured: a scores-sized all-reduce
+        # inside the chunk loop on the 16x16 mesh)
+        sc = constrain(sc, P(("pod", "data"), "model", None, None))
+        valid = kpos[None, :] < t
+        if causal:
+            valid = valid & (qpos >= kpos[None, :])
+        sc = jnp.where(valid, sc, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+        p = jnp.exp(sc - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        o = o * alpha[..., None] + jnp.einsum(
+            "bhst,bthd->bhsd", p, vc.astype(jnp.float32))
+        return (constrain(m_new, _BHS), constrain(l, _BHS),
+                constrain(o, _BHSD)), None
+
+    m0 = constrain(jnp.full((b, h, s), NEG_INF, jnp.float32), _BHS)
+    l0 = constrain(jnp.zeros((b, h, s), jnp.float32), _BHS)
+    o0 = constrain(jnp.zeros((b, h, s, d), jnp.float32), _BHSD)
+    (m, l, o), _ = jax.lax.scan(body, (m0, l0, o0),
+                                (ks, vs, jnp.arange(n)))
+    out = o / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)   # (B,S,H,D)
+
+
+# --------------------------------------------------- GQA train / prefill
+def apply_attn(p, x, cfg: ModelConfig, rt: RunSpec, *,
+               positions, causal: bool = True, kv_x=None):
+    """Full-sequence attention (train / prefill / encoder / cross).
+
+    Returns (out, (k_cache, v_cache)) — caches in LOGICAL kv heads,
+    (B, KV, S_kv, hd), for the decode path.
+    """
+    hp = rt.padded_heads(cfg.n_heads)
+    hd = cfg.hd
+    kv_x = x if kv_x is None else kv_x
+
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    k = jnp.einsum("bsd,dhe->bshe", kv_x, p["wk"])
+    v = jnp.einsum("bsd,dhe->bshe", kv_x, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if "qn" in p:
+        q = _rms(q, p["qn"])
+        k = _rms(k, p["kn"])
+    if positions is not None:   # rope (not used for cross attention)
+        cos, sin = rope_angles(positions, hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    # exact GQA->MHA expansion; sharded evenly over 'model' for any KV
+    q = constrain(q, _BH)
+    kmap = kv_map(cfg, rt)
+    ke = constrain(jnp.take(k, kmap, axis=2), _BH)
+    ve = constrain(jnp.take(v, kmap, axis=2), _BH)
+    out = chunked_attention(q, ke, ve, causal=causal, chunk=rt.attn_chunk)
+    out = jnp.einsum("bshe,hed->bsd", out, p["wo"])
+    if "bo" in p:
+        out = out + p["bo"]
+    cache = (jnp.moveaxis(k, 1, 2), jnp.moveaxis(v, 1, 2))  # (B,KV,S,hd)
+    return out, cache
+
+
+# ------------------------------------------------------ flash decode
+def decode_layout(mesh, batch: int, seq_axis: str = "model"):
+    """Choose (dp_axes, seq_axes) for the decode cache.
+
+    Normal serving: batch over the data axes, sequence over 'model'.
+    long-context (batch smaller than the data axes, e.g. long_500k with
+    global_batch=1): batch replicated, sequence sharded over EVERY mesh
+    axis — 2D context parallelism, 256-way on a 16x16 pod."""
+    dp = tuple(a for a in mesh.axis_names if a != seq_axis)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    if batch % max(dp_size, 1) == 0 and batch >= dp_size:
+        return dp, (seq_axis,)
+    return (), tuple(mesh.axis_names)
+
+
+def _multi_axis_index(seq_axes):
+    idx = jax.lax.axis_index(seq_axes[0])
+    for a in seq_axes[1:]:
+        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+    return idx
+
+
+def flash_decode_local(q, k, v, new_k, new_v, pos, shard_idx, s_loc,
+                       *, axis, kmap, scale):
+    """Per-shard decode attention body (runs inside shard_map).
+
+    q (B,H,hd); k,v (B,KV,S_loc,hd) local slice; new_k/new_v (B,KV,hd);
+    pos scalar int32.  Returns (out (B,H,hd), k', v').
+    """
+    local_pos = pos - shard_idx * s_loc
+    own = (local_pos >= 0) & (local_pos < s_loc)
+    lp = jnp.clip(local_pos, 0, s_loc - 1)
+    # masked single-slot write: read the current slot, select, write back.
+    # (A full-cache jnp.where would force a second cache-sized buffer —
+    # this touches one (B,KV,1,hd) slot and lets XLA update in place.)
+    b_, kvh = k.shape[0], k.shape[1]
+
+    def put(buf, new):
+        cur = jax.lax.dynamic_slice(buf, (0, 0, lp, 0),
+                                    (b_, kvh, 1, buf.shape[3]))
+        val = jnp.where(own, new[:, :, None, :].astype(buf.dtype), cur)
+        return jax.lax.dynamic_update_slice(buf, val, (0, 0, lp, 0))
+
+    k = put(k, new_k)
+    v = put(v, new_v)
+
+    kq = jnp.take(k, kmap, axis=1)          # (B,H,S_loc,hd) local gather
+    vq = jnp.take(v, kmap, axis=1)
+    sc = jnp.einsum("bhd,bhsd->bhs", q.astype(jnp.float32) * scale,
+                    kq.astype(jnp.float32))
+    spos = shard_idx * s_loc + jnp.arange(s_loc)
+    sc = jnp.where(spos[None, None, :] <= pos, sc, NEG_INF)
+
+    m_loc = jnp.max(sc, axis=-1)
+    if axis is not None:
+        m = jax.lax.pmax(m_loc, axis)
+    else:
+        m = m_loc
+    pexp = jnp.exp(sc - m[..., None])
+    l_loc = jnp.sum(pexp, axis=-1)
+    o_loc = jnp.einsum("bhs,bhsd->bhd", pexp, vq.astype(jnp.float32))
+    if axis is not None:
+        l = jax.lax.psum(l_loc, axis)
+        o = jax.lax.psum(o_loc, axis)
+    else:
+        l, o = l_loc, o_loc
+    out = (o / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+    return out, k, v
+
+
+def decode_attn(p, x, cache, pos, cfg: ModelConfig, rt: RunSpec, *,
+                mesh=None, seq_axis: str = "model"):
+    """One-token decode with a sequence-sharded logical-KV cache.
+
+    x (B,1,d); cache (k,v) each (B,KV,S_max,hd) sharded P(dp,None,seq,None).
+    pos: scalar int32 current position.  Returns (out (B,1,d), cache').
+    """
+    hd = cfg.hd
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    k_new = jnp.einsum("bsd,dhe->bshe", x, p["wk"])
+    v_new = jnp.einsum("bsd,dhe->bshe", x, p["wv"])
+    if "bq" in p:
+        q, k_new, v_new = q + p["bq"], k_new + p["bk"], v_new + p["bv"]
+    if "qn" in p:
+        q = _rms(q, p["qn"])
+        k_new = _rms(k_new, p["kn"])
+    posv = jnp.full((x.shape[0], 1), pos)
+    cos, sin = rope_angles(posv, hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k_new = apply_rope(k_new, cos, sin)
+    q = q[:, 0]                      # (B,H,hd) — logical heads only
+    q = q[:, : cfg.n_heads]
+    k_new, v_new = k_new[:, 0], v_new[:, 0]
+
+    kmap = kv_map(cfg, RunSpec(tp=1))[: cfg.n_heads]
+    scale = 1.0 / math.sqrt(hd)
+    k, v = cache
+    s_max = k.shape[2]
+
+    if mesh is None or seq_axis is None:
+        out, k, v = flash_decode_local(
+            q, k, v, k_new, v_new, pos, 0, s_max, axis=None,
+            kmap=kmap, scale=scale)
+    else:
+        dp_axes, seq_axes = decode_layout(mesh, q.shape[0], seq_axis)
+        n_shard = 1
+        for a in seq_axes:
+            n_shard *= mesh.shape[a]
+        s_loc = s_max // n_shard
+
+        def body(q_, k_, v_, nk_, nv_, pos_):
+            idx = _multi_axis_index(seq_axes)
+            return flash_decode_local(q_, k_, v_, nk_, nv_, pos_[0], idx,
+                                      s_loc, axis=seq_axes, kmap=kmap,
+                                      scale=scale)
+
+        dp = dp_axes if dp_axes else None
+        cache_spec = P(dp, None, seq_axes, None)
+        qs = P(dp, None, None)
+        out, k, v = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(qs, cache_spec, cache_spec, qs, qs, P(None)),
+            out_specs=(qs, cache_spec, cache_spec),
+            check_vma=False,
+        )(q, k, v, k_new, v_new, jnp.asarray(pos).reshape(1))
+
+    out = jnp.einsum("bhe,hed->bd", out,
+                     p["wo"][: cfg.n_heads])[:, None, :]
+    if "bo" in p:
+        out = out + p["bo"]
+    return out, (k, v)
+
+
+# ------------------------------------------------------------------ MLA
+def _mla_q(p, x, cfg: ModelConfig, positions):
+    """Latent-projected queries -> (q_nope, q_rope), (B,S,Hp,·)."""
+    cq = _rms(x @ p["wq_a"], p["q_norm"])
+    q = jnp.einsum("bsr,rhe->bshe", cq, p["wq_b"])
+    q_nope = q[..., : cfg.qk_nope_dim]
+    q_rope = q[..., cfg.qk_nope_dim:]
+    cos, sin = rope_angles(positions, cfg.qk_rope_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    return q_nope, q_rope
+
+
+def _mla_kv_latent(p, x, cfg: ModelConfig, positions):
+    """Compressed kv: (c_kv (B,S,kvr) normed, k_rope (B,S,rope) roped)."""
+    kv_a = x @ p["wkv_a"]
+    c_kv = _rms(kv_a[..., : cfg.kv_lora_rank], p["kv_norm"])
+    k_rope = kv_a[..., cfg.kv_lora_rank:]
+    cos, sin = rope_angles(positions, cfg.qk_rope_dim, cfg.rope_theta)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0]
+    return c_kv, k_rope
+
+
+def apply_mla(p, x, cfg: ModelConfig, rt: RunSpec, *, positions):
+    """MLA full-sequence attention.  Cache = packed latent
+    (B, 1, S, kvr+rope) — head-free, which is the whole point of MLA."""
+    nope, vd = cfg.qk_nope_dim, cfg.v_head_dim
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)
+    c_kv, k_rope = _mla_kv_latent(p, x, cfg, positions)
+
+    kv = jnp.einsum("bsr,rhe->bshe", c_kv, p["wkv_b"])
+    k_nope = kv[..., :nope]
+    v = kv[..., nope:]
+    hp = q_nope.shape[2]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (*k_rope.shape[:2], hp, cfg.qk_rope_dim))],
+        axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    # pad v's head dim to match q/k attention output path
+    out = chunked_attention(q, k, jnp.pad(v, ((0, 0), (0, 0), (0, 0),
+                                              (0, k.shape[-1] - vd))),
+                            causal=True, chunk=rt.attn_chunk,
+                            scale=1.0 / math.sqrt(nope + cfg.qk_rope_dim))
+    out = out[..., :vd]
+    out = jnp.einsum("bshe,hed->bsd", out, p["wo"])
+    cache = jnp.concatenate([c_kv, k_rope], axis=-1)[:, None]  # (B,1,S,·)
+    return out, cache
+
+
+def _mla_flash_local(q, ck, new_ck, pos, shard_idx, s_loc, *,
+                     axis: str | None, kvr: int, scale: float):
+    """Absorbed-MLA decode body. q (B,H,kvr+rope); ck (B,1,S_loc,kvr+rope)."""
+    local_pos = pos - shard_idx * s_loc
+    own = (local_pos >= 0) & (local_pos < s_loc)
+    lp = jnp.clip(local_pos, 0, s_loc - 1)
+    cur = jax.lax.dynamic_slice(
+        ck, (0, 0, lp, 0), (ck.shape[0], 1, 1, ck.shape[3]))
+    val = jnp.where(own, new_ck[:, :, None, :].astype(ck.dtype), cur)
+    ck = jax.lax.dynamic_update_slice(ck, val, (0, 0, lp, 0))
+
+    sc = jnp.einsum("bhe,bse->bhs", q.astype(jnp.float32) * scale,
+                    ck[:, 0].astype(jnp.float32))
+    spos = shard_idx * s_loc + jnp.arange(s_loc)
+    sc = jnp.where(spos[None, None, :] <= pos, sc, NEG_INF)
+    m_loc = jnp.max(sc, axis=-1)
+    m = jax.lax.pmax(m_loc, axis) if axis is not None else m_loc
+    pexp = jnp.exp(sc - m[..., None])
+    l_loc = jnp.sum(pexp, axis=-1)
+    o_loc = jnp.einsum("bhs,bsr->bhr", pexp,
+                       ck[:, 0, :, :kvr].astype(jnp.float32))
+    if axis is not None:
+        l = jax.lax.psum(l_loc, axis)
+        o = jax.lax.psum(o_loc, axis)
+    else:
+        l, o = l_loc, o_loc
+    out = (o / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+    return out, ck
+
+
+def mla_decode(p, x, cache, pos, cfg: ModelConfig, rt: RunSpec, *,
+               mesh=None, seq_axis: str = "model"):
+    """One-token absorbed-MLA decode over the seq-sharded latent cache."""
+    nope, vd, kvr = cfg.qk_nope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    h = cfg.n_heads
+    posv = jnp.full((x.shape[0], 1), pos)
+    q_nope, q_rope = _mla_q(p, x, cfg, posv)
+    q_nope, q_rope = q_nope[:, 0, :h], q_rope[:, 0, :h]      # (B,H,·)
+    c_new, kr_new = _mla_kv_latent(p, x, cfg, posv)
+    new_ck = jnp.concatenate([c_new[:, 0], kr_new[:, 0]], axis=-1)[:, None]
+
+    # absorb W_UK:  q_lat[b,h,r] = sum_n q_nope[b,h,n] * wkv_b[r,h,n]
+    w_uk = p["wkv_b"][..., :nope][:, :h]                     # (kvr,H,nope)
+    q_lat = jnp.einsum("bhn,rhn->bhr", q_nope, w_uk)
+    q = jnp.concatenate([q_lat, q_rope], axis=-1)            # (B,H,kvr+rope)
+    scale = 1.0 / math.sqrt(nope + cfg.qk_rope_dim)
+
+    if mesh is None or seq_axis is None:
+        out, ck = _mla_flash_local(q, cache, new_ck, pos, 0,
+                                   cache.shape[2], axis=None, kvr=kvr,
+                                   scale=scale)
+    else:
+        dp_axes, seq_axes = decode_layout(mesh, q.shape[0], seq_axis)
+        n_shard = 1
+        for a in seq_axes:
+            n_shard *= mesh.shape[a]
+        s_loc = cache.shape[2] // n_shard
+
+        def body(q_, ck_, nck_, pos_):
+            idx = _multi_axis_index(seq_axes)
+            return _mla_flash_local(q_, ck_, nck_, pos_[0], idx, s_loc,
+                                    axis=seq_axes, kvr=kvr, scale=scale)
+
+        dp = dp_axes if dp_axes else None
+        cs = P(dp, None, seq_axes, None)
+        qs = P(dp, None, None)
+        out, ck = jax.shard_map(body, mesh=mesh,
+                            in_specs=(qs, cs, qs, P(None)),
+                            out_specs=(qs, cs), check_vma=False,
+                            )(q, cache, new_ck, jnp.asarray(pos).reshape(1))
+
+    # absorb W_UV: out[b,h,e] = sum_r out_lat[b,h,r] * wkv_b[r,h,nope+e]
+    w_uv = p["wkv_b"][..., nope:][:, :h]                     # (kvr,H,vd)
+    o = jnp.einsum("bhr,rhe->bhe", out, w_uv)
+    o = jnp.einsum("bhe,hed->bd", o, p["wo"][:h])[:, None]
+    return o, ck

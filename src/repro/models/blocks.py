@@ -1,0 +1,154 @@
+"""Transformer / Mamba / hybrid blocks and scanned stacks."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, RunSpec
+from . import attention, mamba2, moe
+from .layers import apply_mlp, apply_norm, mlp_defs, norm_defs
+from .module import ParamDef, stack
+
+
+# ------------------------------------------------------------ attn block
+def block_defs(cfg: ModelConfig, rt: RunSpec, cross: bool = False) -> dict:
+    d = cfg.d_model
+    defs = {"norm1": norm_defs(d), "norm2": norm_defs(d)}
+    if cfg.mla:
+        defs["attn"] = attention.attn_defs(cfg, rt)
+    else:
+        defs["attn"] = attention.attn_defs(cfg, rt)
+    if cross:
+        defs["norm_x"] = norm_defs(d)
+        defs["xattn"] = attention.attn_defs(cfg, rt, cross=True)
+    if cfg.n_experts:
+        defs["ffn"] = moe.moe_defs(cfg, rt)
+    else:
+        defs["ffn"] = mlp_defs(d, cfg.d_ff, cfg.mlp, cfg.mlp_bias)
+    return defs
+
+
+def apply_block(p, x, cfg: ModelConfig, rt: RunSpec, *, positions,
+                causal=True, enc_out=None):
+    """Full-sequence block (train/prefill). Returns (x, cache)."""
+    rs = cfg.residual_scale
+    h = apply_norm(p["norm1"], x, cfg.norm)
+    if cfg.mla:
+        a, cache = attention.apply_mla(p["attn"], h, cfg, rt,
+                                       positions=positions)
+    else:
+        a, cache = attention.apply_attn(p["attn"], h, cfg, rt,
+                                        positions=positions, causal=causal)
+    x = x + a * rs
+    if enc_out is not None:
+        h = apply_norm(p["norm_x"], x, cfg.norm)
+        a, xcache = attention.apply_attn(p["xattn"], h, cfg, rt,
+                                         positions=None, causal=False,
+                                         kv_x=enc_out)
+        x = x + a * rs
+        cache = (cache, xcache)
+    h = apply_norm(p["norm2"], x, cfg.norm)
+    if cfg.n_experts:
+        f = moe.apply_moe(p["ffn"], h, cfg, rt)
+    else:
+        f = apply_mlp(p["ffn"], h, cfg.mlp)
+    return x + f * rs, cache
+
+
+def apply_block_decode(p, x, cache, pos, cfg: ModelConfig, rt: RunSpec, *,
+                       mesh=None, seq_axis="model"):
+    """One-token block step against the cache. Returns (x, cache')."""
+    rs = cfg.residual_scale
+    xcache = None
+    if isinstance(cache, tuple) and len(cache) == 2 \
+            and isinstance(cache[0], tuple):
+        cache, xcache = cache          # (self, cross)
+    h = apply_norm(p["norm1"], x, cfg.norm)
+    if cfg.mla:
+        a, cache = attention.mla_decode(p["attn"], h, cache, pos, cfg, rt,
+                                        mesh=mesh, seq_axis=seq_axis)
+    else:
+        a, cache = attention.decode_attn(p["attn"], h, cache, pos, cfg, rt,
+                                         mesh=mesh, seq_axis=seq_axis)
+    x = x + a * rs
+    if xcache is not None:
+        h = apply_norm(p["norm_x"], x, cfg.norm)
+        k, v = xcache                  # static encoder kv: plain attention
+        kmap = attention.kv_map(cfg, RunSpec(tp=1))[: cfg.n_heads]
+        q = jnp.einsum("bsd,dhe->bshe", h,
+                       p["xattn"]["wq"])[:, :, : cfg.n_heads]
+        ke = jnp.take(k, kmap, axis=1)
+        ve = jnp.take(v, kmap, axis=1)
+        sc = jnp.einsum("bshe,bhte->bhst", q * (cfg.hd ** -0.5),
+                        ke.astype(q.dtype))
+        pr = jax.nn.softmax(sc.astype(jnp.float32), axis=-1).astype(q.dtype)
+        o = jnp.einsum("bhst,bhte->bshe", pr, ve.astype(q.dtype))
+        a = jnp.einsum("bshe,hed->bsd", o,
+                       p["xattn"]["wo"][: cfg.n_heads])
+        x = x + a * rs
+        cache = (cache, xcache)
+    h = apply_norm(p["norm2"], x, cfg.norm)
+    if cfg.n_experts:
+        f = moe.apply_moe(p["ffn"], h, cfg, rt)
+    else:
+        f = apply_mlp(p["ffn"], h, cfg.mlp)
+    return x + f * rs, cache
+
+
+# ----------------------------------------------------------- mamba block
+def mamba_block_defs(cfg: ModelConfig, rt: RunSpec) -> dict:
+    return {"norm": norm_defs(cfg.d_model),
+            "mixer": mamba2.mamba_defs(cfg, rt)}
+
+
+def apply_mamba_block(p, x, cfg, rt, cache=None):
+    h = apply_norm(p["norm"], x, cfg.norm)
+    out, cache = mamba2.apply_mamba(p["mixer"], h, cfg, rt, cache)
+    return x + out, cache
+
+
+def apply_mamba_block_decode(p, x, cache, cfg, rt):
+    h = apply_norm(p["norm"], x, cfg.norm)
+    out, cache = mamba2.mamba_decode(p["mixer"], h, cache, cfg, rt)
+    return x + out, cache
+
+
+# ------------------------------------------------------------- stacks
+def _maybe_remat(fn, rt: RunSpec):
+    if rt.remat == "block":
+        return jax.checkpoint(fn, policy=None)
+    return fn
+
+
+def stack_defs(cfg: ModelConfig, rt: RunSpec, n: int,
+               cross: bool = False) -> dict:
+    return stack(block_defs(cfg, rt, cross=cross), n)
+
+
+def apply_stack(params, x, cfg: ModelConfig, rt: RunSpec, *, positions,
+                causal=True, enc_out=None, collect_cache=False):
+    """lax.scan over a stacked block tree; optionally emit per-layer caches."""
+
+    def body(h, layer_p):
+        h2, cache = apply_block(layer_p, h, cfg, rt, positions=positions,
+                                causal=causal, enc_out=enc_out)
+        return h2, (cache if collect_cache else None)
+
+    body = _maybe_remat(body, rt)
+    x, caches = jax.lax.scan(body, x, params)
+    return x, caches
+
+
+def apply_stack_decode(params, x, caches, pos, cfg: ModelConfig,
+                       rt: RunSpec, *, mesh=None, seq_axis="model"):
+    def body(h, inp):
+        layer_p, cache = inp
+        h2, cache = apply_block_decode(layer_p, h, cache, pos, cfg, rt,
+                                       mesh=mesh, seq_axis=seq_axis)
+        return h2, cache
+
+    x, caches = jax.lax.scan(body, x, (params, caches))
+    return x, caches

@@ -1,0 +1,100 @@
+"""Shared layers: norms, MLPs, RoPE, embeddings.
+
+Param-def builders return pytrees of ParamDef with PartitionSpecs following
+the standard Megatron mapping on the ('data','model') mesh:
+  - embeddings: vocab over 'model'
+  - MLP in-proj: ff over 'model'; out-proj: ff over 'model' (row-parallel)
+  - per-feature norm scales: replicated
+Activations keep d_model replicated under TP; XLA inserts the two
+all-reduces per block (attention out, MLP out) that Megatron TP implies.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .module import ParamDef
+
+
+# ----------------------------------------------------------------- norms
+def norm_defs(d: int) -> dict:
+    return {"scale": ParamDef((d,), P(), init="ones"),
+            "bias": ParamDef((d,), P(), init="zeros")}
+
+
+def apply_norm(p, x, kind: str, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        r = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+        out = xf * r * p["scale"]
+    else:  # layernorm
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ MLPs
+def mlp_defs(d: int, ff: int, kind: str, bias: bool = False) -> dict:
+    defs = {}
+    if kind == "swiglu":
+        defs["wi"] = ParamDef((d, ff), P(None, "model"))
+        defs["wg"] = ParamDef((d, ff), P(None, "model"))
+    else:
+        defs["wi"] = ParamDef((d, ff), P(None, "model"))
+    defs["wo"] = ParamDef((ff, d), P("model", None))
+    if bias:
+        defs["bi"] = ParamDef((ff,), P("model"), init="zeros")
+        defs["bo"] = ParamDef((d,), P(), init="zeros")
+    return defs
+
+
+def apply_mlp(p, x, kind: str):
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])
+    else:
+        h = x @ p["wi"]
+        if "bi" in p:
+            h = h + p["bi"]
+        h = jax.nn.gelu(h)
+    out = h @ p["wo"]
+    if "bo" in p:
+        out = out + p["bo"]
+    return out
+
+
+# ------------------------------------------------------------------ RoPE
+def rope_angles(positions: jnp.ndarray, dim: int, theta: float
+                ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """positions (...,) -> cos/sin (..., dim/2)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions[..., None].astype(jnp.float32) * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray
+               ) -> jnp.ndarray:
+    """x (..., S, H, dim) with cos/sin (..., S, dim/2) (broadcast over H)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1
+                           ).astype(x.dtype)
+
+
+# ------------------------------------------------------------ embeddings
+def embed_defs(vocab: int, d: int) -> dict:
+    return {"table": ParamDef((vocab, d), P("model", None), scale=1.0)}
+
+
+def apply_embed(p, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def lm_head_defs(vocab: int, d: int) -> dict:
+    return {"w": ParamDef((d, vocab), P(None, "model"))}
+
+
+def apply_lm_head(p, x: jnp.ndarray) -> jnp.ndarray:
+    return x @ p["w"]

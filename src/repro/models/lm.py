@@ -1,0 +1,458 @@
+"""Full model assembly for all assigned architecture families.
+
+Public surface (dispatches on cfg.family):
+
+  param_defs(cfg, rt)                  -> ParamDef pytree
+  forward(params, batch, cfg, rt)      -> logits (train-style full seq)
+  loss_fn(params, batch, cfg, rt)      -> scalar CE (+ MoE aux)
+  prefill(params, batch, cfg, rt, s_max)-> (logits_last, caches)
+  decode_step(params, tok, caches, pos, cfg, rt, mesh) -> (logits, caches)
+
+Batch dict keys per family:
+  lm/moe:   tokens (B,S), labels (B,S), mask (B,S)
+  vlm:      + patches (B,n_img,frontend_dim); tokens are the text part
+  audio:    frames (B,T,frontend_dim), tokens/labels/mask for the decoder
+  ssm/hybrid: as lm
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, RunSpec
+from . import attention, blocks, mamba2, moe
+from .layers import (apply_embed, apply_lm_head, apply_mlp, apply_norm,
+                     embed_defs, lm_head_defs, mlp_defs, norm_defs)
+from .module import ParamDef, stack
+
+
+# =====================================================================
+# param defs
+# =====================================================================
+def _zamba_shared_cfg(cfg: ModelConfig) -> ModelConfig:
+    """The zamba2 shared block runs at width 2*d (concat [h, x_emb])."""
+    return dataclasses.replace(
+        cfg, d_model=2 * cfg.d_model, head_dim=2 * cfg.d_model // cfg.n_heads,
+        n_experts=0, family="dense")
+
+
+def n_attn_sites(cfg: ModelConfig) -> int:
+    return -(-cfg.n_layers // cfg.attn_every)
+
+
+def param_defs(cfg: ModelConfig, rt: RunSpec) -> dict:
+    d = cfg.d_model
+    defs: dict = {"embed": embed_defs(cfg.padded_vocab, d),
+                  "final_norm": norm_defs(d)}
+    if not cfg.tie_embeddings:
+        defs["head"] = lm_head_defs(cfg.padded_vocab, d)
+
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        defs["blocks"] = blocks.stack_defs(cfg, rt, cfg.n_layers)
+    elif fam == "ssm":
+        defs["blocks"] = stack(blocks.mamba_block_defs(cfg, rt),
+                               cfg.n_layers)
+    elif fam == "hybrid":
+        defs["blocks"] = stack(blocks.mamba_block_defs(cfg, rt),
+                               cfg.n_layers)
+        scfg = _zamba_shared_cfg(cfg)
+        defs["shared"] = {
+            "norm": norm_defs(scfg.d_model),
+            "attn": attention.attn_defs(scfg, rt),
+            "norm2": norm_defs(scfg.d_model),
+            "mlp": mlp_defs(scfg.d_model, cfg.d_ff, cfg.mlp),
+            "proj": ParamDef((scfg.d_model, d), P(None, None)),
+        }
+        if cfg.shared_lora_rank:
+            ns, r = n_attn_sites(cfg), cfg.shared_lora_rank
+            defs["lora_a"] = ParamDef((ns, scfg.d_model, r), P(None, None, None),
+                                      scale=0.01)
+            defs["lora_b"] = ParamDef((ns, r, scfg.d_model), P(None, None, None),
+                                      init="zeros")
+    elif fam == "audio":
+        defs["frontend"] = {"w": ParamDef((cfg.frontend_dim, d), P(None, None)),
+                            "norm": norm_defs(d)}
+        enc_cfg = dataclasses.replace(cfg, family="dense")
+        defs["encoder"] = blocks.stack_defs(enc_cfg, rt, cfg.enc_layers)
+        defs["enc_norm"] = norm_defs(d)
+        defs["blocks"] = blocks.stack_defs(cfg, rt, cfg.n_layers, cross=True)
+    if fam == "vlm":
+        defs["projector"] = {
+            "norm": norm_defs(cfg.frontend_dim),
+            "w1": ParamDef((cfg.frontend_dim, d), P(None, "model")),
+            "w2": ParamDef((d, d), P("model", None)),
+        }
+    return defs
+
+
+# =====================================================================
+# shared-block helpers (zamba2)
+# =====================================================================
+def _apply_shared(shared, lora, x, x0, cfg: ModelConfig, rt: RunSpec, *,
+                  positions, cache=None, pos=None, mesh=None,
+                  seq_axis="model"):
+    """Zamba2 shared attention block on concat([x, x0]); returns (dx, cache)."""
+    scfg = _zamba_shared_cfg(cfg)
+    h = jnp.concatenate([x, x0], axis=-1)
+    if lora is not None:
+        la, lb = lora
+        h = h + (h @ la) @ lb
+    h = apply_norm(shared["norm"], h, cfg.norm)
+    if cache is None:
+        a, cache = attention.apply_attn(shared["attn"], h, scfg, rt,
+                                        positions=positions, causal=True)
+    else:
+        a, cache = attention.decode_attn(shared["attn"], h, cache, pos,
+                                         scfg, rt, mesh=mesh,
+                                         seq_axis=seq_axis)
+    h = h + a
+    m = apply_mlp(shared["mlp"], apply_norm(shared["norm2"], h, cfg.norm),
+                  cfg.mlp)
+    return (h + m) @ shared["proj"], cache
+
+
+def _hybrid_stack(params, x, cfg: ModelConfig, rt: RunSpec, *, positions,
+                  mamba_caches=None, attn_caches=None, pos=None,
+                  decode=False, mesh=None, seq_axis="model"):
+    """Scan over mamba blocks, shared attn every cfg.attn_every blocks.
+
+    Site KV caches are carried as a stacked (n_sites, ...) pytree updated
+    with dynamic slices at the matching step.
+    """
+    x0 = x
+    k_every = cfg.attn_every
+    ns = n_attn_sites(cfg)
+    has_lora = "lora_a" in params
+
+    def body(carry, inp):
+        h, acaches = carry
+        layer_p, mcache, i = inp
+        site = i // k_every
+
+        def with_attn(h, acaches):
+            lora = None
+            if has_lora:
+                lora = (jax.lax.dynamic_index_in_dim(
+                            params["lora_a"], site, 0, keepdims=False),
+                        jax.lax.dynamic_index_in_dim(
+                            params["lora_b"], site, 0, keepdims=False))
+            if decode:
+                cache = jax.tree.map(
+                    lambda c: jax.lax.dynamic_index_in_dim(
+                        c, site, 0, keepdims=False), acaches)
+                dx, cache = _apply_shared(params["shared"], lora, h, x0,
+                                          cfg, rt, positions=positions,
+                                          cache=cache, pos=pos, mesh=mesh,
+                                          seq_axis=seq_axis)
+                acaches = jax.tree.map(
+                    lambda full, c: jax.lax.dynamic_update_index_in_dim(
+                        full, c, site, 0), acaches, cache)
+            else:
+                dx, cache = _apply_shared(params["shared"], lora, h, x0,
+                                          cfg, rt, positions=positions)
+                if acaches is not None:
+                    def put(full, c):
+                        # pad prefill cache (B,KV,S,hd) to the S_max slot
+                        pad = full.shape[-2] - c.shape[-2]
+                        c = jnp.pad(c, ((0, 0), (0, 0), (0, pad), (0, 0)))
+                        return jax.lax.dynamic_update_index_in_dim(
+                            full, c, site, 0)
+                    acaches = jax.tree.map(put, acaches, cache)
+            return h + dx, acaches
+
+        h, acaches = jax.lax.cond(
+            i % k_every == 0,
+            lambda: with_attn(h, acaches),
+            lambda: (h, acaches))
+
+        if decode:
+            h, mcache = blocks.apply_mamba_block_decode(layer_p, h, mcache,
+                                                        cfg, rt)
+        else:
+            h, mcache = blocks.apply_mamba_block(layer_p, h, cfg, rt,
+                                                 mcache)
+        return (h, acaches), mcache
+
+    idx = jnp.arange(cfg.n_layers)
+    (x, attn_caches), mamba_caches = jax.lax.scan(
+        body, (x, attn_caches), (params["blocks"], mamba_caches, idx))
+    return x, mamba_caches, attn_caches
+
+
+# =====================================================================
+# forward / loss
+# =====================================================================
+def _embed_in(params, batch, cfg: ModelConfig, rt: RunSpec):
+    """Token/patch/frame embedding -> (x, positions, label_info)."""
+    fam = cfg.family
+    if fam == "audio":
+        x = batch["frames"] @ params["frontend"]["w"]
+        x = apply_norm(params["frontend"]["norm"], x, cfg.norm)
+        return x
+    if rt.embed_via_matmul:
+        onehot = jax.nn.one_hot(batch["tokens"], cfg.padded_vocab,
+                                dtype=params["embed"]["table"].dtype)
+        x = jnp.einsum("bsv,vd->bsd", onehot,
+                       params["embed"]["table"]) * cfg.scale_emb
+    else:
+        x = apply_embed(params["embed"], batch["tokens"]) * cfg.scale_emb
+    if fam == "vlm":
+        pj = params["projector"]
+        v = apply_norm(pj["norm"], batch["patches"], "layernorm")
+        v = jax.nn.gelu(v @ pj["w1"]) @ pj["w2"]
+        x = jnp.concatenate([v.astype(x.dtype), x], axis=1)
+    return x
+
+
+def _head(params, x, cfg: ModelConfig):
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"]["table"])
+    else:
+        logits = apply_lm_head(params["head"], x)
+    if cfg.padded_vocab != cfg.vocab:
+        # mask Megatron vocab-padding rows out of the distribution
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab
+        logits = jnp.where(pad_mask, jnp.asarray(-1e30, logits.dtype),
+                           logits)
+    return logits
+
+
+def forward(params, batch, cfg: ModelConfig, rt: RunSpec) -> jnp.ndarray:
+    fam = cfg.family
+    if fam == "audio":
+        enc = _embed_in(params, batch, cfg, rt)
+        epos = jnp.arange(enc.shape[1])[None, :]
+        enc_cfg = dataclasses.replace(cfg, family="dense")
+        enc, _ = blocks.apply_stack(params["encoder"], enc, enc_cfg, rt,
+                                    positions=epos, causal=False)
+        enc = apply_norm(params["enc_norm"], enc, cfg.norm)
+        x = apply_embed(params["embed"], batch["tokens"])
+        dpos = jnp.arange(x.shape[1])[None, :]
+        x, _ = blocks.apply_stack(params["blocks"], x, cfg, rt,
+                                  positions=dpos, causal=True, enc_out=enc)
+        return _head(params, x, cfg)
+
+    x = _embed_in(params, batch, cfg, rt)
+    positions = jnp.arange(x.shape[1])[None, :]
+    if fam in ("dense", "moe", "vlm"):
+        x, _ = blocks.apply_stack(params["blocks"], x, cfg, rt,
+                                  positions=positions, causal=True)
+    elif fam == "ssm":
+        def body(h, layer_p):
+            h, _ = blocks.apply_mamba_block(layer_p, h, cfg, rt)
+            return h, None
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+    elif fam == "hybrid":
+        x, _, _ = _hybrid_stack(params, x, cfg, rt, positions=positions)
+    if fam == "vlm":
+        x = x[:, cfg.n_frontend_tokens:]      # logits for text positions
+    return _head(params, x, cfg)
+
+
+_LOGITS_SPEC = P(("pod", "data"), None, "model")   # (B, S, V)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, rt: RunSpec) -> jnp.ndarray:
+    from repro.distributed.sharding import constrain
+
+    # logits stay in compute dtype (bf16): the f32 CE math below casts
+    # internally, so the cotangent re-enters the backward in bf16 — an
+    # explicit f32 cast here made every backward TP all-reduce f32
+    # (measured 2x collective wire bytes on the 16x16 mesh).
+    logits = forward(params, batch, cfg, rt)
+    logits = constrain(logits, _LOGITS_SPEC)
+    labels = batch["labels"]
+    mask = batch["mask"].astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    # label pick via one-hot contraction, NOT take_along_axis: on a
+    # vocab-sharded logits tensor a gather forces GSPMD to all-gather the
+    # full (B,S,V) logits (measured: it dominated the train-step
+    # collective term); the iota-compare-multiply-reduce form stays local
+    # to each vocab shard and reduces with one tiny psum.  The one-hot is
+    # pinned to the logits layout or GSPMD materializes it replicated.
+    onehot = constrain(
+        jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype),
+        _LOGITS_SPEC)
+    picked = jnp.sum((logits * onehot).astype(jnp.float32), axis=-1)
+    ce = jnp.sum((lse - picked) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    if cfg.n_experts:
+        ce = ce + 0.01 * _moe_aux(params, batch, cfg, rt)
+    return ce
+
+
+def _moe_aux(params, batch, cfg, rt):
+    # router aux on the embedded input of the first layer (cheap proxy
+    # applied per layer via stop-gradient-free scan would double compute)
+    x = _embed_in(params, batch, cfg, rt)
+    first = jax.tree.map(lambda a: a[0], params["blocks"]["ffn"])
+    return moe.aux_load_loss(first, x, cfg)
+
+
+# =====================================================================
+# serving: prefill + single-token decode
+# =====================================================================
+def _pad_cache_seq(cache, s_max: int):
+    """Pad every cache leaf's sequence axis (-2) up to s_max."""
+    def pad(c):
+        s = c.shape[-2]
+        widths = [(0, 0)] * c.ndim
+        widths[-2] = (0, s_max - s)
+        return jnp.pad(c, widths)
+    return jax.tree.map(pad, cache)
+
+
+def prefill(params, batch, cfg: ModelConfig, rt: RunSpec, s_max: int,
+            mesh=None):
+    """Process the prompt, return (last-position logits, caches @ s_max)."""
+    fam = cfg.family
+    if fam == "audio":
+        enc = _embed_in(params, batch, cfg, rt)
+        epos = jnp.arange(enc.shape[1])[None, :]
+        enc_cfg = dataclasses.replace(cfg, family="dense")
+        enc, _ = blocks.apply_stack(params["encoder"], enc, enc_cfg, rt,
+                                    positions=epos, causal=False)
+        enc = apply_norm(params["enc_norm"], enc, cfg.norm)
+        x = apply_embed(params["embed"], batch["tokens"])
+        dpos = jnp.arange(x.shape[1])[None, :]
+        x, caches = blocks.apply_stack(params["blocks"], x, cfg, rt,
+                                       positions=dpos, causal=True,
+                                       enc_out=enc, collect_cache=True)
+        self_c, cross_c = caches
+        caches = (_pad_cache_seq(self_c, s_max), cross_c)
+        return _head(params, x[:, -1:], cfg)[:, 0], caches
+
+    x = _embed_in(params, batch, cfg, rt)
+    positions = jnp.arange(x.shape[1])[None, :]
+    if fam in ("dense", "moe", "vlm"):
+        x, caches = blocks.apply_stack(params["blocks"], x, cfg, rt,
+                                       positions=positions, causal=True,
+                                       collect_cache=True)
+        caches = _pad_cache_seq(caches, s_max)
+    elif fam == "ssm":
+        def body(h, layer_p):
+            h, cache = blocks.apply_mamba_block(layer_p, h, cfg, rt)
+            return h, cache
+        x, caches = jax.lax.scan(body, x, params["blocks"])
+    elif fam == "hybrid":
+        acaches = init_hybrid_attn_cache(cfg, rt, x.shape[0], s_max,
+                                         x.dtype)
+        x, mcaches, acaches = _hybrid_stack(params, x, cfg, rt,
+                                            positions=positions,
+                                            attn_caches=acaches)
+        caches = (mcaches, acaches)
+    return _head(params, x[:, -1:], cfg)[:, 0], caches
+
+
+def decode_step(params, tokens, caches, pos, cfg: ModelConfig,
+                rt: RunSpec, mesh=None, seq_axis: str = "model",
+                extra=None):
+    """One token for every sequence in the batch.
+
+    tokens (B,1) int32; pos scalar int32 (current write position).
+    Returns (logits (B, vocab), caches')."""
+    fam = cfg.family
+    x = apply_embed(params["embed"], tokens) * cfg.scale_emb
+    if fam == "audio":
+        self_c, cross_c = caches
+        x, self_c = blocks.apply_stack_decode(
+            params["blocks"], x, (self_c, cross_c), pos, cfg, rt,
+            mesh=mesh, seq_axis=seq_axis)
+        caches = self_c
+    elif fam in ("dense", "moe", "vlm"):
+        x, caches = blocks.apply_stack_decode(params["blocks"], x, caches,
+                                              pos, cfg, rt, mesh=mesh,
+                                              seq_axis=seq_axis)
+    elif fam == "ssm":
+        def body(h, inp):
+            layer_p, cache = inp
+            h, cache = blocks.apply_mamba_block_decode(layer_p, h, cache,
+                                                       cfg, rt)
+            return h, cache
+        x, caches = jax.lax.scan(body, x, (params["blocks"], caches))
+    elif fam == "hybrid":
+        mcaches, acaches = caches
+        x, mcaches, acaches = _hybrid_stack(
+            params, x, cfg, rt, positions=None, mamba_caches=mcaches,
+            attn_caches=acaches, pos=pos, decode=True, mesh=mesh,
+            seq_axis=seq_axis)
+        caches = (mcaches, acaches)
+    return _head(params, x, cfg)[:, 0], caches
+
+
+# =====================================================================
+# cache constructors (abstract-friendly: shapes only)
+# =====================================================================
+def init_hybrid_attn_cache(cfg: ModelConfig, rt: RunSpec, batch: int,
+                           s_max: int, dtype=jnp.bfloat16):
+    scfg = _zamba_shared_cfg(cfg)
+    ns = n_attn_sites(cfg)
+    shape = (ns, batch, scfg.n_kv_heads, s_max, scfg.hd)
+    return (jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def cache_specs(cfg: ModelConfig, rt: RunSpec, batch: int, s_max: int,
+                dtype=jnp.bfloat16, mesh=None, seq_axis: str = "model",
+                enc_len: int | None = None):
+    """ShapeDtypeStruct + PartitionSpec trees for the decode caches.
+
+    Used by the dry-run to lower serve_step without allocating 32k-token
+    caches, and by serve.py to build real zero caches.  The layout follows
+    attention.decode_layout: batch over the data axes when divisible,
+    otherwise the sequence is sharded over every mesh axis (long_500k)."""
+    l = cfg.n_layers
+    fam = cfg.family
+    if mesh is not None:
+        dp_axes, seq_axes = attention.decode_layout(mesh, batch, seq_axis)
+        dp = dp_axes if dp_axes else None
+        seq = seq_axes
+        tp = "model"
+    else:
+        dp, seq, tp = None, None, None
+
+    def kv(kvh, hd, length):
+        shape = (l, batch, kvh, length, hd)
+        return (jax.ShapeDtypeStruct(shape, dtype),
+                P(None, dp, None, seq, None))
+
+    if fam in ("dense", "moe", "vlm"):
+        if cfg.mla:
+            shape = (l, batch, 1, s_max, cfg.kv_lora_rank + cfg.qk_rope_dim)
+            return (jax.ShapeDtypeStruct(shape, dtype),
+                    P(None, dp, None, seq, None))
+        k = kv(cfg.n_kv_heads, cfg.hd, s_max)
+        return ((k[0], k[0]), (k[1], k[1]))
+    if fam == "ssm":
+        st = jax.ShapeDtypeStruct(
+            (l, batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_headdim),
+            jnp.float32)
+        st_s = P(None, dp, tp, None, None)
+        cx = jax.ShapeDtypeStruct(
+            (l, batch, cfg.ssm_conv - 1, cfg.ssm_heads, cfg.ssm_headdim),
+            dtype)
+        cx_s = P(None, dp, None, tp, None)
+        cb = jax.ShapeDtypeStruct(
+            (l, batch, cfg.ssm_conv - 1, cfg.ssm_state), dtype)
+        cb_s = P(None, dp, None, None)
+        return ((st, (cx, cb, cb)), (st_s, (cx_s, cb_s, cb_s)))
+    if fam == "hybrid":
+        mc, mc_s = cache_specs(
+            dataclasses.replace(cfg, family="ssm"), rt, batch, s_max,
+            dtype, mesh, seq_axis)
+        scfg = _zamba_shared_cfg(cfg)
+        ns = n_attn_sites(cfg)
+        shape = (ns, batch, scfg.n_kv_heads, s_max, scfg.hd)
+        a = jax.ShapeDtypeStruct(shape, dtype)
+        a_s = P(None, dp, None, seq, None)
+        return ((mc, (a, a)), (mc_s, (a_s, a_s)))
+    if fam == "audio":
+        k = kv(cfg.n_kv_heads, cfg.hd, s_max)
+        kx = kv(cfg.n_kv_heads, cfg.hd, enc_len or s_max)
+        return (((k[0], k[0]), (kx[0], kx[0])),
+                ((k[1], k[1]), (kx[1], kx[1])))
+    raise ValueError(fam)

@@ -1,0 +1,195 @@
+"""Mamba2 — SSD (state-space duality) blocks, chunked matmul form.
+
+The SSD insight (Dao & Gu 2024) is exactly the right shape for a TPU: the
+sequence is split into chunks of Q tokens; *within* a chunk the recurrence
+is expanded into a masked (Q x Q) matmul (MXU), *between* chunks a tiny
+(nh, hd, ds) state is carried by a scan.  We implement:
+
+  * train/prefill: chunked SSD with lax.scan over chunks;
+  * decode: O(1) single-token state update (this is why the long_500k cell
+    runs for SSM/hybrid archs only — the "cache" is a fixed-size state).
+
+Sharding: SSM heads over 'model' (all assigned configs have nh % 16 == 0),
+B/C (group-shared, ngroups=1) replicated, batch over data axes.
+
+Conv: depthwise causal width-4 over the concatenated (x, B, C) channels,
+expressed as 4 shifted elementwise FMAs (no conv op needed).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, RunSpec
+from .module import ParamDef
+
+
+def mamba_defs(cfg: ModelConfig, rt: RunSpec) -> dict:
+    d = cfg.d_model
+    nh, hd, ds = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    conv = cfg.ssm_conv
+    return {
+        "wz": ParamDef((d, nh, hd), P(None, "model", None)),
+        "wx": ParamDef((d, nh, hd), P(None, "model", None)),
+        "wB": ParamDef((d, ds), P(None, None)),
+        "wC": ParamDef((d, ds), P(None, None)),
+        "wdt": ParamDef((d, nh), P(None, "model")),
+        "dt_bias": ParamDef((nh,), P("model"), init="zeros"),
+        "A_log": ParamDef((nh,), P("model"), init="zeros"),
+        "D": ParamDef((nh,), P("model"), init="ones"),
+        "conv_x": ParamDef((conv, nh, hd), P(None, "model", None),
+                           scale=0.5),
+        "conv_B": ParamDef((conv, ds), P(None, None), scale=0.5),
+        "conv_C": ParamDef((conv, ds), P(None, None), scale=0.5),
+        "norm": ParamDef((nh, hd), P("model", None), init="ones"),
+        "wo": ParamDef((nh, hd, d), P("model", None, None)),
+    }
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv via shifted adds.
+
+    x (B,S,...), w (conv, ...) broadcasting over trailing dims.
+    state (B, conv-1, ...) holds the last tokens of the previous segment.
+    Returns (y, new_state)."""
+    conv = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], conv - 1, *x.shape[2:]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1]] * w[conv - 1 - i]
+            for i in range(conv))
+    new_state = xp[:, xp.shape[1] - (conv - 1):]
+    return jax.nn.silu(y), new_state
+
+
+def _gated_norm(y, z, scale, eps=1e-5):
+    g = y * jax.nn.silu(z)
+    gf = g.astype(jnp.float32)
+    r = jax.lax.rsqrt(jnp.mean(gf * gf, axis=-1, keepdims=True) + eps)
+    return (gf * r * scale).astype(y.dtype)
+
+
+def apply_mamba(p, xin, cfg: ModelConfig, rt: RunSpec, cache=None):
+    """xin (B,S,d) -> (out (B,S,d), cache').
+
+    cache = (ssm_state (B,nh,hd,ds), conv_states) carried across segments
+    (prefill -> decode).  Training passes cache=None.
+    """
+    b, s, _ = xin.shape
+    nh, hd, ds = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    q = min(cfg.ssm_chunk, s)
+    s_pad = -(-s // q) * q                # pad to a chunk multiple
+    nc = s_pad // q
+
+    z = jnp.einsum("bsd,dhe->bshe", xin, p["wz"])
+    x = jnp.einsum("bsd,dhe->bshe", xin, p["wx"])
+    bb = xin @ p["wB"]
+    cc = xin @ p["wC"]
+    dt = jax.nn.softplus(jnp.einsum("bsd,dh->bsh", xin, p["wdt"])
+                         + p["dt_bias"])                       # (B,S,nh)
+
+    st0 = None
+    cstates = (None, None, None)
+    if cache is not None:
+        st0, cstates = cache
+    x, cx = _causal_conv(x, p["conv_x"], cstates[0])
+    bb, cb = _causal_conv(bb, p["conv_B"], cstates[1])
+    cc, ccs = _causal_conv(cc, p["conv_C"], cstates[2])
+
+    a = dt * (-jnp.exp(p["A_log"].astype(jnp.float32)))       # (B,S,nh) <=0
+    xbar = x * dt[..., None]                                  # dt-scaled input
+    if s_pad != s:
+        # pad tail: a=0 (no state decay), xbar=0 (no state input) so the
+        # carried-out state is exact; padded outputs are sliced off below.
+        a = jnp.pad(a, ((0, 0), (0, s_pad - s), (0, 0)))
+        xbar = jnp.pad(xbar, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+        bb = jnp.pad(bb, ((0, 0), (0, s_pad - s), (0, 0)))
+        cc = jnp.pad(cc, ((0, 0), (0, s_pad - s), (0, 0)))
+
+    # chunk views
+    ar = a.reshape(b, nc, q, nh)
+    cum = jnp.cumsum(ar, axis=2)                              # within-chunk
+    xr = xbar.reshape(b, nc, q, nh, hd)
+    br = bb.reshape(b, nc, q, ds)
+    cr = cc.reshape(b, nc, q, ds)
+
+    # ---- intra-chunk: masked (Q x Q) matmuls (the "duality") ----
+    g = jnp.einsum("bcid,bcjd->bcij", cr, br)                 # (B,nc,Q,Q)
+    li = cum[:, :, :, None, :]                                # i decay
+    lj = cum[:, :, None, :, :]                                # j decay
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.where(mask[None, None, :, :, None],
+                      jnp.exp(li - lj), 0.0)                  # (B,nc,Q,Q,nh)
+    m = g[..., None] * decay
+    y_intra = jnp.einsum("bcijh,bcjhe->bcihe", m, xr)
+
+    # ---- chunk states and inter-chunk scan ----
+    tail = cum[:, :, -1:, :]                                  # (B,nc,1,nh)
+    sdecay = jnp.exp(tail - cum)                              # decay to end
+    s_c = jnp.einsum("bcjd,bcjh,bcjhe->bchde", br, sdecay, xr)  # (B,nc,nh?,)
+    # NOTE einsum above: (B,nc,Q,ds) x (B,nc,Q,nh) x (B,nc,Q,nh,hd)
+    #   -> (B, nc, nh, ds, hd)
+    chunk_a = jnp.exp(tail[:, :, 0, :])                       # (B,nc,nh)
+
+    if st0 is None:
+        st0 = jnp.zeros((b, nh, ds, hd), jnp.float32)
+
+    def scan_body(h, inp):
+        s_i, a_i = inp                                        # per chunk
+        h_new = h * a_i[..., None, None] + s_i
+        return h_new, h                                       # emit PRE state
+
+    (h_last, h_pre) = jax.lax.scan(
+        scan_body, st0.astype(jnp.float32),
+        (jnp.moveaxis(s_c.astype(jnp.float32), 1, 0),
+         jnp.moveaxis(chunk_a, 1, 0)))
+    h_pre = jnp.moveaxis(h_pre, 0, 1)                         # (B,nc,nh,ds,hd)
+
+    y_inter = jnp.einsum("bcid,bcih,bchde->bcihe",
+                         cr, jnp.exp(cum), h_pre.astype(cr.dtype))
+
+    y = (y_intra + y_inter).reshape(b, s_pad, nh, hd)[:, :s]
+    y = y + x * p["D"][:, None]
+    y = _gated_norm(y, z, p["norm"])
+    out = jnp.einsum("bshe,hed->bsd", y, p["wo"]).astype(xin.dtype)
+    return out, (h_last, (cx, cb, ccs))
+
+
+def mamba_decode(p, xin, cache, cfg: ModelConfig, rt: RunSpec):
+    """Single-token step: xin (B,1,d); cache from apply_mamba/init_cache."""
+    b = xin.shape[0]
+    nh, hd, ds = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    st, cstates = cache
+
+    z = jnp.einsum("bsd,dhe->bshe", xin, p["wz"])
+    x = jnp.einsum("bsd,dhe->bshe", xin, p["wx"])
+    bb = xin @ p["wB"]
+    cc = xin @ p["wC"]
+    dt = jax.nn.softplus(jnp.einsum("bsd,dh->bsh", xin, p["wdt"])
+                         + p["dt_bias"])                      # (B,1,nh)
+
+    x, cx = _causal_conv(x, p["conv_x"], cstates[0])
+    bb, cb = _causal_conv(bb, p["conv_B"], cstates[1])
+    cc, ccs = _causal_conv(cc, p["conv_C"], cstates[2])
+
+    a = jnp.exp(dt[:, 0] * (-jnp.exp(p["A_log"].astype(jnp.float32))))
+    xbar = (x * dt[..., None])[:, 0]                          # (B,nh,hd)
+    st = st.astype(jnp.float32) * a[..., None, None] \
+        + jnp.einsum("bd,bhe->bhde", bb[:, 0].astype(jnp.float32),
+                     xbar.astype(jnp.float32))
+    y = jnp.einsum("bd,bhde->bhe", cc[:, 0], st.astype(cc.dtype))
+    y = y + x[:, 0] * p["D"][:, None]
+    y = _gated_norm(y[:, None], z, p["norm"])[:, 0]
+    out = jnp.einsum("bhe,hed->bd", y, p["wo"])[:, None].astype(xin.dtype)
+    return out, (st, (cx, cb, ccs))
+
+
+def init_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    nh, hd, ds, conv = (cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state,
+                        cfg.ssm_conv)
+    st = jnp.zeros((batch, nh, ds, hd), jnp.float32)
+    cx = jnp.zeros((batch, conv - 1, nh, hd), dtype)
+    cb = jnp.zeros((batch, conv - 1, ds), dtype)
+    cc = jnp.zeros((batch, conv - 1, ds), dtype)
+    return st, (cx, cb, cc)

@@ -1,0 +1,66 @@
+"""Hierarchical gradient compression for the cross-pod axis.
+
+In production meshes the intra-pod ICI links (~50 GB/s) are an order of
+magnitude faster than the inter-pod DCI links, so gradient compression
+pays exactly once: ON THE POD AXIS.  We implement int8 error-feedback
+quantization applied only to the cross-pod all-reduce:
+
+  * inside a pod, gradients reduce in full precision (XLA's own
+    all-reduce over ('data',) — fast ICI);
+  * across pods, each pod quantizes (g + e) to int8 with a per-tensor
+    scale, psums the int8 payload (exact in int32 accumulation), and
+    dequantizes; the quantization residual e is carried in the optimizer
+    state (error feedback), which keeps SGD convergence unbiased in the
+    long run (Karimireddy et al., 2019).
+
+Expressed with a *partially-manual* shard_map: only 'pod' is manual, the
+data/model sharding inside stays automatic (GSPMD).  The collective-bytes
+parser in the roofline harness shows the 4x cross-pod byte reduction.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(g: jnp.ndarray, err: jnp.ndarray | None):
+    """(g + err) -> (int8 payload, scale, new_err)."""
+    gf = g.astype(jnp.float32)
+    if err is not None:
+        gf = gf + err
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    new_err = gf - q.astype(jnp.float32) * scale
+    return q, scale, new_err
+
+
+def crosspod_reduce(grads, err, axis: str = "pod"):
+    """Mean-reduce ``grads`` across ``axis`` on an INT8 wire with error
+    feedback.  Must run inside a shard_map where ``axis`` is manual.
+
+    Scheme: all pods agree on a shared scale (pmax — one scalar
+    collective), each quantizes (g + e)/n into int8 so the exact int8 sum
+    cannot overflow, the all-reduce moves 1 byte/element instead of 4, and
+    the quantization residual e' is carried into the next step.
+    """
+    n = jax.lax.axis_size(axis)
+    lim = 127 // n
+
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        scale = jax.lax.pmax(jnp.max(jnp.abs(gf)), axis)
+        step = jnp.maximum(scale, 1e-30) / lim        # per-pod quantum
+        q = jnp.clip(jnp.round(gf / step), -lim, lim).astype(jnp.int8)
+        total = jax.lax.psum(q, axis)                 # int8 wire, no overflow
+        mean = total.astype(jnp.float32) * step / n
+        new_e = gf - q.astype(jnp.float32) * step
+        return mean, new_e
+
+    if err is None:
+        err = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+    g_l, treedef = jax.tree.flatten(grads)
+    e_l = jax.tree.leaves(err)
+    outs = [one(g, e) for g, e in zip(g_l, e_l)]
+    red = treedef.unflatten([o[0] for o in outs])
+    new_err = treedef.unflatten([o[1] for o in outs])
+    return red, new_err

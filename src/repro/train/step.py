@@ -1,0 +1,163 @@
+"""Training / serving step builders (pjit-ready, dry-run-lowerable).
+
+``make_train_step`` returns a pure function
+    (state, batch) -> (state, metrics)
+with:
+  * mixed precision: bf16 compute params re-materialized from the f32
+    ZeRO-1-sharded master each step (the all-gather half of ZeRO);
+  * gradient accumulation: lax.scan over ``rt.microbatches`` microbatches
+    (remat'd blocks inside), grads accumulated in f32;
+  * optional cross-pod int8 error-feedback gradient compression via a
+    partially-manual shard_map (only the 'pod' axis manual — see
+    optim/compress.py);
+  * AdamW update on the sharded master (the reduce-scatter half emerges
+    from the master's data-axis sharding under pjit).
+
+``make_serve_steps`` returns (prefill_fn, decode_fn) for the serving
+shapes; decode uses the sequence-sharded flash-decode cache layout.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, RunSpec
+from repro.distributed.sharding import constrain
+from repro.models import lm
+from repro.optim import adamw
+from repro.optim.compress import crosspod_reduce
+
+
+def _cast(tree, dtype):
+    return jax.tree.map(
+        lambda a: a.astype(dtype)
+        if jnp.issubdtype(a.dtype, jnp.floating) else a, tree)
+
+
+def make_train_step(cfg: ModelConfig, rt: RunSpec,
+                    opt_cfg: adamw.AdamWConfig,
+                    compute_dtype=jnp.bfloat16,
+                    batch_axes: tuple[str, ...] = ("data",),
+                    compress_pod_axis: str | None = None,
+                    mesh=None):
+    mb = rt.microbatches
+
+    def loss_grad(params, batch):
+        return jax.value_and_grad(
+            lambda p: lm.loss_fn(p, batch, cfg, rt))(params)
+
+    def grads_of(params, batch):
+        if mb == 1:
+            loss, grads = loss_grad(params, batch)
+            return loss, _cast(grads, jnp.float32)
+
+        def split(x):
+            x = x.reshape(mb, x.shape[0] // mb, *x.shape[1:])
+            return constrain(x, P(None, batch_axes))
+
+        stacked = jax.tree.map(split, batch)
+
+        def body(carry, mbatch):
+            loss_acc, g_acc = carry
+            loss, grads = loss_grad(params, mbatch)
+            g_acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), g_acc, grads)
+            return (loss_acc + loss, g_acc), None
+
+        g0 = jax.tree.map(
+            lambda a: jnp.zeros(a.shape, jnp.float32), params)
+        (loss_sum, g_sum), _ = jax.lax.scan(body, (0.0, g0), stacked)
+        inv = 1.0 / mb
+        return loss_sum * inv, jax.tree.map(lambda g: g * inv, g_sum)
+
+    def train_step(state, batch):
+        params = _cast(state["opt"]["master"], compute_dtype)
+
+        if compress_pod_axis is not None:
+            def manual(params_, batch_, err_):
+                loss_, grads_ = grads_of(params_, batch_)
+                grads_, err_ = crosspod_reduce(grads_, err_,
+                                               compress_pod_axis)
+                loss_ = jax.lax.pmean(loss_, compress_pod_axis)
+                return loss_, grads_, err_
+
+            pspec = jax.tree.map(lambda _: P(), params)
+            bspec = jax.tree.map(lambda _: P(compress_pod_axis), batch)
+            espec = jax.tree.map(lambda _: P(compress_pod_axis),
+                                 state["err"])
+            loss, grads, err = jax.shard_map(
+                manual, mesh=mesh,
+                in_specs=(pspec, bspec, espec),
+                out_specs=(P(), pspec, espec),
+                axis_names={compress_pod_axis}, check_vma=False,
+            )(params, batch, state["err"])
+        else:
+            loss, grads = grads_of(params, batch)
+            err = state.get("err")
+
+        opt, metrics = adamw.apply_update(opt_cfg, state["opt"], grads,
+                                          state["step"])
+        new_state = {"opt": opt, "step": state["step"] + 1}
+        if err is not None:
+            new_state["err"] = err
+        metrics = {"loss": loss, **metrics}
+        return new_state, metrics
+
+    return train_step
+
+
+def init_train_state(param_defs, opt_cfg, key=None,
+                     data_axes=("data",), data_size: int = 1,
+                     n_pods: int = 0):
+    """Real (allocated) train state for smoke-scale training."""
+    from repro.models import module
+
+    odefs = adamw.opt_defs(param_defs, data_axes, data_size)
+    key = key if key is not None else jax.random.PRNGKey(0)
+    master = module.init(key, odefs["master"])
+    zeros = lambda defs: module.init(key, defs)
+    state = {"opt": {"master": master,
+                     "m": zeros(odefs["m"]),
+                     "v": zeros(odefs["v"])},
+             "step": jnp.zeros((), jnp.int32)}
+    if n_pods:
+        state["err"] = jax.tree.map(
+            lambda d: jnp.zeros((n_pods, *d.shape), jnp.float32),
+            odefs["master"],
+            is_leaf=lambda x: hasattr(x, "shape") and hasattr(x, "pspec"))
+    return state
+
+
+def abstract_train_state(param_defs, data_axes=("data",),
+                         data_size: int = 1, n_pods: int = 0):
+    """ShapeDtypeStructs + PartitionSpecs for the dry-run (no allocation)."""
+    from repro.models import module
+    from repro.models.module import ParamDef
+    import dataclasses as dc
+
+    odefs = adamw.opt_defs(param_defs, data_axes, data_size)
+    state_defs = {"opt": odefs}
+    if n_pods:
+        def _strip_pod(ps):
+            out = []
+            for part in ps:
+                if isinstance(part, (tuple, list)):
+                    kept = tuple(a for a in part if a != "pod")
+                    out.append(kept if kept else None)
+                else:
+                    out.append(None if part == "pod" else part)
+            return out
+
+        state_defs["err"] = jax.tree.map(
+            lambda d: dc.replace(d, shape=(n_pods, *d.shape),
+                                 pspec=P("pod", *_strip_pod(d.pspec)),
+                                 dtype=jnp.float32),
+            odefs["master"], is_leaf=lambda x: isinstance(x, ParamDef))
+    shapes = module.abstract(state_defs)
+    specs = module.pspecs(state_defs)
+    shapes["step"] = jax.ShapeDtypeStruct((), jnp.int32)
+    specs["step"] = P()
+    return shapes, specs

@@ -1,0 +1,34 @@
+import os
+import sys
+
+# Tests must see exactly ONE device (the dry-run sets its own 512-device
+# flag inside launch/dryrun.py only). Keep math deterministic on CPU.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+from repro.configs.base import ModelConfig, RunSpec  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rt():
+    return RunSpec(tp=1, remat="none", attn_chunk=64)
+
+
+@pytest.fixture(scope="session")
+def tiny_dense():
+    return ModelConfig(name="tiny", family="dense", n_layers=2, d_model=64,
+                       n_heads=4, n_kv_heads=2, d_ff=128, vocab=256,
+                       qkv_bias=True)
+
+
+def make_lm_batch(cfg, b=2, s=16, key=0):
+    import jax.numpy as jnp
+
+    k = jax.random.PRNGKey(key)
+    toks = jax.random.randint(k, (b, s), 0, cfg.vocab)
+    return {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1),
+            "mask": jnp.ones((b, s), jnp.float32)}

@@ -1,0 +1,138 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.params import DepamParams
+from repro.core import tol as toldefs
+from repro.kernels import ct_rfft, framepsd, ops, ref, welch as welchk
+from repro.kernels import tol as tolk
+
+
+def _p(nfft, ws, ov, n_frames=10, window="hamming"):
+    hop = ws - ov
+    sec = ((n_frames - 1) * hop + ws) / 32768.0
+    return DepamParams(nfft=nfft, window_size=ws, window_overlap=ov,
+                       record_size_sec=sec, window=window)
+
+
+def _maxrel(a, b, floor=1e-9):
+    return float(jnp.max(jnp.abs(a - b) / (jnp.abs(b) + floor)))
+
+
+class TestFramePsdDirect:
+    @pytest.mark.parametrize("nfft,ws,ov", [
+        (256, 256, 128),      # paper set 1
+        (128, 128, 0),
+        (512, 384, 288),      # zero-padded fft, 75% overlap
+        (64, 64, 32),
+        (256, 128, 64),       # nfft > windowSize
+    ])
+    def test_vs_oracle(self, nfft, ws, ov):
+        p = _p(nfft, ws, ov)
+        rng = np.random.default_rng(nfft + ov)
+        x = jnp.asarray(rng.standard_normal((3, p.record_size)), jnp.float32)
+        got = framepsd.frame_psd(x, p, interpret=True)
+        want = ref.frame_psd(x, p)
+        assert got.shape == want.shape
+        assert _maxrel(got, want, 1e-6) < 5e-4
+
+    @pytest.mark.parametrize("window", ["hann", "hamming", "rect"])
+    def test_windows(self, window):
+        p = _p(256, 256, 128, window=window)
+        rng = np.random.default_rng(7)
+        x = jnp.asarray(rng.standard_normal(p.record_size), jnp.float32)
+        got = framepsd.frame_psd(x, p, interpret=True)
+        want = ref.frame_psd(x, p)
+        assert _maxrel(got, want, 1e-6) < 5e-4
+
+    def test_odd_block_sizes(self):
+        """Frame/bin counts not multiples of the block shapes."""
+        p = _p(256, 256, 128, n_frames=13)
+        rng = np.random.default_rng(9)
+        x = jnp.asarray(rng.standard_normal(p.record_size), jnp.float32)
+        got = framepsd.frame_psd(x, p, block_frames=8, block_bins=128,
+                                 interpret=True)
+        want = ref.frame_psd(x, p)
+        assert got.shape == want.shape
+        assert _maxrel(got, want, 1e-6) < 5e-4
+
+
+class TestWelchFused:
+    @pytest.mark.parametrize("nfft,ws,ov,nrec", [
+        (256, 256, 128, 4), (128, 128, 0, 3), (256, 256, 192, 2),
+    ])
+    def test_vs_oracle(self, nfft, ws, ov, nrec):
+        p = _p(nfft, ws, ov, n_frames=20)
+        rng = np.random.default_rng(11)
+        x = jnp.asarray(rng.standard_normal((nrec, p.record_size)),
+                        jnp.float32)
+        got = framepsd.welch_psd(x, p, interpret=True)
+        want = ref.welch_psd(x, p)
+        assert _maxrel(got, want, 1e-9) < 1e-4
+
+    def test_chunked_frame_accumulation(self):
+        p = _p(128, 128, 64, n_frames=50)
+        rng = np.random.default_rng(13)
+        x = jnp.asarray(rng.standard_normal((2, p.record_size)), jnp.float32)
+        got = framepsd.welch_psd(x, p, chunk_frames=16, interpret=True)
+        want = ref.welch_psd(x, p)
+        assert _maxrel(got, want, 1e-9) < 1e-4
+
+
+class TestCooleyTukey:
+    @pytest.mark.parametrize("nfft,n1", [
+        (4096, 64), (4096, 32), (1024, 32), (256, 16),
+    ])
+    def test_vs_oracle(self, nfft, n1):
+        p = _p(nfft, nfft, 0, n_frames=3)
+        rng = np.random.default_rng(nfft)
+        frames = jnp.asarray(rng.standard_normal((5, nfft)), jnp.float32)
+        got = ct_rfft.ct_frame_psd(frames, p, n1=n1, interpret=True)
+        want = ref.ct_frame_psd(frames, p)
+        assert got.shape == want.shape
+        assert _maxrel(got, want, 1e-6) < 1e-3
+
+    def test_zero_padded_window(self):
+        p = _p(1024, 768, 0, n_frames=2)
+        rng = np.random.default_rng(5)
+        frames = jnp.asarray(rng.standard_normal((3, 768)), jnp.float32)
+        got = ct_rfft.ct_frame_psd(frames, p, n1=32, interpret=True)
+        want = ref.ct_frame_psd(frames, p)
+        assert _maxrel(got, want, 1e-6) < 1e-3
+
+    def test_flop_advantage_documented(self):
+        """radix-64^2 does ~15x fewer mults than the direct DFT matmul."""
+        n = 4096
+        direct = 4 * n * (n // 2 + 1)
+        n1 = n2 = 64
+        ct = 4 * n1 * n1 * n2 + 6 * n + 8 * n1 * n2 * (n2 // 2 + 1)
+        assert direct / ct > 10
+
+
+class TestWelchMeanAndTol:
+    def test_welch_mean(self):
+        rng = np.random.default_rng(17)
+        fp = jnp.asarray(rng.random((5, 33, 129)), jnp.float32)
+        got = welchk.welch_mean(fp, block_records=2, chunk_frames=8,
+                                interpret=True)
+        want = ref.welch_mean(fp)
+        assert _maxrel(got, want) < 1e-5
+
+    def test_tol_kernel(self):
+        p = _p(256, 256, 128)
+        m = jnp.asarray(toldefs.band_matrix(p))
+        rng = np.random.default_rng(19)
+        psd = jnp.asarray(rng.random((7, p.n_bins)) + 1e-6, jnp.float32)
+        got = tolk.tol_levels(psd, m, p, block_records=4, interpret=True)
+        want = ref.tol_levels(psd, m, p)
+        assert float(jnp.max(jnp.abs(got - want))) < 1e-4
+
+
+class TestDispatch:
+    def test_backend_choice(self):
+        assert ops.psd_backend(_p(256, 256, 128)) == "direct"
+        assert ops.psd_backend(_p(4096, 4096, 0)) == "ct"
+        # hop does not divide the window and nfft is not a power of two
+        assert ops.psd_backend(_p(768, 384, 100)) == "xla"

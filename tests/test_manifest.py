@@ -1,0 +1,64 @@
+"""Manifest / shard-plan invariants (fault tolerance + elasticity)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.manifest import DatasetManifest, ShardPlan, plan, replan
+
+
+def _covered(p: ShardPlan, from_step=0, to_step=None):
+    out = set()
+    to_step = p.n_steps if to_step is None else to_step
+    for s in range(from_step, to_step):
+        idx = p.step_indices(s)
+        out |= set(idx[p.step_mask(s)].tolist())
+    return out
+
+
+class TestPlan:
+    @given(n_files=st.integers(1, 20), rpf=st.integers(1, 20),
+           shards=st.integers(1, 9), chunk=st.integers(1, 7))
+    @settings(max_examples=50, deadline=None)
+    def test_full_coverage_no_duplicates(self, n_files, rpf, shards, chunk):
+        m = DatasetManifest(n_files, rpf, 100, 1000.0)
+        p = plan(m, shards, chunk)
+        seen = []
+        for s in range(p.n_steps):
+            idx = p.step_indices(s)
+            assert idx.shape == (shards, chunk)
+            seen.extend(idx[p.step_mask(s)].tolist())
+        assert sorted(seen) == list(range(m.n_records))
+
+    @given(n=st.integers(1, 200), shards=st.integers(1, 8),
+           chunk=st.integers(1, 8), step=st.integers(0, 50))
+    @settings(max_examples=50, deadline=None)
+    def test_cursor_is_prefix(self, n, shards, chunk, step):
+        m = DatasetManifest(n, 1, 10, 10.0)
+        p = plan(m, shards, chunk)
+        step = min(step, p.n_steps - 1)
+        cursor = p.cursor_after(step)
+        done = _covered(p, 0, step + 1)
+        assert done == set(range(cursor))
+
+    @given(n=st.integers(2, 150), s1=st.integers(1, 6), s2=st.integers(1, 6),
+           chunk=st.integers(1, 5), committed=st.integers(0, 30))
+    @settings(max_examples=60, deadline=None)
+    def test_elastic_replan_exact_coverage(self, n, s1, s2, chunk,
+                                           committed):
+        """Kill the job after `committed` steps, restart on a different
+        worker count: the union of covered records is exact, no gaps, no
+        overlap."""
+        m = DatasetManifest(n, 1, 10, 10.0)
+        p1 = plan(m, s1, chunk)
+        committed = min(committed, p1.n_steps)
+        done = _covered(p1, 0, committed)
+        p2 = replan(p1, committed, s2)
+        rest = _covered(p2)
+        assert done | rest == set(range(n))
+        assert not (done & rest)
+
+    def test_locality_contiguous_per_shard(self):
+        m = DatasetManifest(10, 10, 100, 1000.0)
+        p = plan(m, 4, 8)
+        idx = p.step_indices(0)
+        for s in range(4):
+            assert (np.diff(idx[s]) == 1).all()

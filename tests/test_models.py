@@ -1,0 +1,217 @@
+"""Model zoo: per-arch smoke tests (REDUCED configs), decode equivalence,
+SSD-vs-recurrence oracle, gradient sanity."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as configs
+from repro.configs.base import ModelConfig, RunSpec
+from repro.models import lm, mamba2, module
+
+RT = RunSpec(tp=1, remat="none", attn_chunk=64)
+
+
+def _batch(cfg, b=2, s=16, key=0):
+    k = jax.random.PRNGKey(key)
+    toks = jax.random.randint(k, (b, s), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1),
+             "mask": jnp.ones((b, s), jnp.float32)}
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(
+            k, (b, cfg.n_frontend_tokens, cfg.frontend_dim))
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(k, (b, s * 2, cfg.frontend_dim))
+    return batch
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+class TestArchSmoke:
+    """Assignment requirement: per-arch REDUCED-config smoke test running
+    one forward/train step on CPU, asserting shapes and no NaNs."""
+
+    def test_forward_shapes_and_finite(self, arch):
+        cfg = configs.get(arch, reduced=True)
+        batch = _batch(cfg)
+        params = module.init(jax.random.PRNGKey(0), lm.param_defs(cfg, RT))
+        logits = lm.forward(params, batch, cfg, RT)
+        s_out = batch["tokens"].shape[1]
+        assert logits.shape == (2, s_out, cfg.vocab)
+        assert bool(jnp.isfinite(logits).all())
+
+    def test_one_train_step_reduces_nothing_nan(self, arch):
+        cfg = configs.get(arch, reduced=True)
+        batch = _batch(cfg)
+        params = module.init(jax.random.PRNGKey(0), lm.param_defs(cfg, RT))
+        loss, grads = jax.value_and_grad(
+            lambda p: lm.loss_fn(p, batch, cfg, RT))(params)
+        assert bool(jnp.isfinite(loss))
+        gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                             for g in jax.tree.leaves(grads)))
+        assert bool(jnp.isfinite(gnorm)) and float(gnorm) > 0
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_decode_matches_forward(arch):
+    """prefill(S-1) + decode(1) == forward(S) at the last position.
+
+    MoE archs run with a drop-free capacity factor: capacity dropping is
+    batch-composition-dependent by design, so exact prefill/decode
+    equivalence only holds without drops."""
+    cfg = configs.get(arch, reduced=True)
+    rt = RT
+    if cfg.n_experts:
+        import dataclasses
+        rt = dataclasses.replace(RT, capacity_factor=float(cfg.n_experts))
+    s = 16
+    batch = _batch(cfg, s=s)
+    params = module.init(jax.random.PRNGKey(0), lm.param_defs(cfg, rt))
+    full = lm.forward(params, batch, cfg, rt)[:, -1]
+    pb = dict(batch)
+    pb["tokens"] = batch["tokens"][:, : s - 1]
+    s_max = s + 4 + (cfg.n_frontend_tokens if cfg.family == "vlm" else 0)
+    _, caches = lm.prefill(params, pb, cfg, rt, s_max=s_max)
+    pos = s - 1 + (cfg.n_frontend_tokens if cfg.family == "vlm" else 0)
+    logits, _ = lm.decode_step(params, batch["tokens"][:, s - 1:], caches,
+                               jnp.int32(pos), cfg, rt)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(full),
+                               rtol=2e-2, atol=2e-3)
+
+
+class TestSSDOracle:
+    """Chunked SSD == naive sequential state-space recurrence."""
+
+    def _ref_ssd(self, x, dt, A, bb, cc):
+        """Naive sequential recurrence (no D-skip: compared pre-skip)."""
+        b, s, nh, hd = x.shape
+        ds = bb.shape[-1]
+        st = np.zeros((b, nh, ds, hd))
+        ys = []
+        for t in range(s):
+            a_t = np.exp(dt[:, t] * A)[:, :, None, None]
+            st = st * a_t + np.einsum(
+                "bd,bhe->bhde", bb[:, t], x[:, t] * dt[:, t][..., None])
+            ys.append(np.einsum("bd,bhde->bhe", cc[:, t], st))
+        return np.stack(ys, axis=1), st
+
+    @pytest.mark.parametrize("chunk,s", [(4, 16), (8, 16), (16, 16), (8, 12)])
+    def test_chunked_matches_sequential(self, chunk, s):
+        rng = np.random.default_rng(chunk + s)
+        b, nh, hd, ds = 2, 3, 4, 5
+        cfg = ModelConfig(name="x", family="ssm", n_layers=1, d_model=nh * hd // 2,
+                          n_heads=1, n_kv_heads=1, d_ff=0, vocab=16,
+                          ssm_state=ds, ssm_headdim=hd, ssm_chunk=chunk)
+        # drive the core math directly (bypassing conv/gating)
+        x = rng.standard_normal((b, s, nh, hd)).astype(np.float32)
+        dt = rng.uniform(0.1, 0.9, (b, s, nh)).astype(np.float32)
+        A = -rng.uniform(0.5, 1.5, nh).astype(np.float32)
+        bb = rng.standard_normal((b, s, ds)).astype(np.float32)
+        cc = rng.standard_normal((b, s, ds)).astype(np.float32)
+
+        want, want_state = self._ref_ssd(x, dt, A, bb, cc)
+
+        # chunked path: same decomposition apply_mamba uses
+        a = dt * A[None, None]                     # log-decay (<= 0)
+        xbar = x * dt[..., None]
+        got, got_state = _chunked_core(jnp.asarray(a), jnp.asarray(xbar),
+                                       jnp.asarray(bb), jnp.asarray(cc),
+                                       chunk)
+        np.testing.assert_allclose(np.asarray(got), want, rtol=2e-4,
+                                   atol=2e-4)
+        np.testing.assert_allclose(np.asarray(got_state), want_state,
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_prefill_then_decode_matches_long_prefill(self):
+        cfg = configs.get("mamba2-2.7b", reduced=True)
+        s = 17
+        batch = _batch(cfg, s=s)
+        params = module.init(jax.random.PRNGKey(0), lm.param_defs(cfg, RT))
+        full = lm.forward(params, batch, cfg, RT)
+        pb = dict(batch)
+        pb["tokens"] = batch["tokens"][:, : s - 2]
+        _, caches = lm.prefill(params, pb, cfg, RT, s_max=s)
+        logits = None
+        for i in (s - 2, s - 1):
+            logits, caches = lm.decode_step(
+                params, batch["tokens"][:, i : i + 1], caches,
+                jnp.int32(i), cfg, RT)
+        np.testing.assert_allclose(np.asarray(logits),
+                                   np.asarray(full[:, -1]), rtol=2e-2,
+                                   atol=2e-3)
+
+
+def _chunked_core(a, xbar, bb, cc, q):
+    """Minimal reimplementation of apply_mamba's chunked SSD core for the
+    oracle test (same math, no conv/gate)."""
+    b, s, nh = a.shape
+    hd = xbar.shape[-1]
+    ds = bb.shape[-1]
+    nc = s // q if s % q == 0 else -(-s // q)
+    sp = nc * q
+    if sp != s:
+        a = jnp.pad(a, ((0, 0), (0, sp - s), (0, 0)))
+        xbar = jnp.pad(xbar, ((0, 0), (0, sp - s), (0, 0), (0, 0)))
+        bb = jnp.pad(bb, ((0, 0), (0, sp - s), (0, 0)))
+        cc = jnp.pad(cc, ((0, 0), (0, sp - s), (0, 0)))
+    ar = a.reshape(b, nc, q, nh)
+    cum = jnp.cumsum(ar, axis=2)
+    xr = xbar.reshape(b, nc, q, nh, hd)
+    br = bb.reshape(b, nc, q, ds)
+    cr = cc.reshape(b, nc, q, ds)
+    g = jnp.einsum("bcid,bcjd->bcij", cr, br)
+    li = cum[:, :, :, None, :]
+    lj = cum[:, :, None, :, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.where(mask[None, None, :, :, None], jnp.exp(li - lj), 0.0)
+    m = g[..., None] * decay
+    y_intra = jnp.einsum("bcijh,bcjhe->bcihe", m, xr)
+    tail = cum[:, :, -1:, :]
+    sdecay = jnp.exp(tail - cum)
+    s_c = jnp.einsum("bcjd,bcjh,bcjhe->bchde", br, sdecay, xr)
+    chunk_a = jnp.exp(tail[:, :, 0, :])
+
+    def body(h, inp):
+        s_i, a_i = inp
+        return h * a_i[..., None, None] + s_i, h
+
+    h_last, h_pre = jax.lax.scan(
+        body, jnp.zeros((b, nh, ds, hd)),
+        (jnp.moveaxis(s_c, 1, 0), jnp.moveaxis(chunk_a, 1, 0)))
+    h_pre = jnp.moveaxis(h_pre, 0, 1)
+    y_inter = jnp.einsum("bcid,bcih,bchde->bcihe", cr, jnp.exp(cum), h_pre)
+    y = (y_intra + y_inter).reshape(b, sp, nh, hd)[:, :s]
+    return y, h_last
+
+
+class TestParamSystem:
+    def test_counts_match_assigned_sizes(self):
+        """Full configs land near their nominal parameter counts."""
+        expected = {"qwen1.5-0.5b": (0.4e9, 0.7e9),
+                    "internlm2-20b": (17e9, 23e9),
+                    "starcoder2-7b": (6e9, 9e9),
+                    "minicpm3-4b": (3e9, 5e9),
+                    "mamba2-2.7b": (2e9, 3.5e9),
+                    "arctic-480b": (430e9, 520e9)}
+        for arch, (lo, hi) in expected.items():
+            cfg = configs.get(arch)
+            n = module.count_params(lm.param_defs(cfg, RunSpec(tp=1)))
+            assert lo < n < hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9},{hi/1e9}]"
+
+    def test_init_deterministic_and_order_free(self):
+        cfg = configs.get("qwen1.5-0.5b", reduced=True)
+        defs = lm.param_defs(cfg, RT)
+        a = module.init(jax.random.PRNGKey(3), defs)
+        b = module.init(jax.random.PRNGKey(3), defs)
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+            assert (x == y).all()
+
+    def test_abstract_matches_init_shapes(self):
+        cfg = configs.get("zamba2-1.2b", reduced=True)
+        defs = lm.param_defs(cfg, RT)
+        ab = module.abstract(defs)
+        real = module.init(jax.random.PRNGKey(0), defs)
+        for s, r in zip(jax.tree.leaves(ab), jax.tree.leaves(real)):
+            assert s.shape == r.shape

@@ -1,0 +1,147 @@
+"""System-invariant property tests (hypothesis where the space is big)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as configs
+from repro.configs.base import ModelConfig, RunSpec
+from repro.core.params import DepamParams
+from repro.core.windows import np_window
+from repro.kernels import framepsd, ref
+from repro.models import lm, module
+
+RT = RunSpec(tp=1, remat="none", attn_chunk=32)
+
+
+class TestCausality:
+    """Changing a future token must not change past logits."""
+
+    @pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "mamba2-2.7b",
+                                      "zamba2-1.2b", "minicpm3-4b"])
+    def test_future_token_does_not_leak(self, arch):
+        cfg = configs.get(arch, reduced=True)
+        params = module.init(jax.random.PRNGKey(0), lm.param_defs(cfg, RT))
+        k = jax.random.PRNGKey(1)
+        toks = jax.random.randint(k, (1, 12), 0, cfg.vocab)
+        batch = {"tokens": toks}
+        a = lm.forward(params, batch, cfg, RT)
+        toks2 = toks.at[0, 9].set((toks[0, 9] + 1) % cfg.vocab)
+        b = lm.forward(params, {"tokens": toks2}, cfg, RT)
+        # positions strictly before the edit are identical
+        np.testing.assert_allclose(np.asarray(a[:, :9]),
+                                   np.asarray(b[:, :9]), rtol=1e-5,
+                                   atol=1e-5)
+        # the edited position itself must differ (sanity of the test)
+        assert not np.allclose(np.asarray(a[:, 9]), np.asarray(b[:, 9]))
+
+    def test_encoder_is_bidirectional(self):
+        """Audio ENCODER is not causal: early frames see late frames."""
+        cfg = configs.get("seamless-m4t-large-v2", reduced=True)
+        params = module.init(jax.random.PRNGKey(0), lm.param_defs(cfg, RT))
+        k = jax.random.PRNGKey(2)
+        frames = jax.random.normal(k, (1, 16, cfg.frontend_dim))
+        toks = jax.random.randint(k, (1, 8), 0, cfg.vocab)
+        a = lm.forward(params, {"frames": frames, "tokens": toks}, cfg, RT)
+        frames2 = frames.at[0, -1].add(1.0)
+        b = lm.forward(params, {"frames": frames2, "tokens": toks},
+                       cfg, RT)
+        assert not np.allclose(np.asarray(a[:, 0]), np.asarray(b[:, 0]))
+
+
+class TestVocabPadding:
+    def test_padded_logits_never_win(self):
+        import dataclasses
+        cfg = dataclasses.replace(
+            configs.get("qwen1.5-0.5b", reduced=True),
+            vocab=500, vocab_pad_multiple=256)     # pads 500 -> 512
+        assert cfg.padded_vocab == 512
+        params = module.init(jax.random.PRNGKey(0), lm.param_defs(cfg, RT))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, 500)
+        logits = lm.forward(params, {"tokens": toks}, cfg, RT)
+        assert logits.shape[-1] == 512
+        assert int(jnp.max(jnp.argmax(logits, -1))) < 500
+        assert float(jnp.max(logits[..., 500:])) <= -1e29
+
+
+class TestWindows:
+    def test_hann_cola_at_half_overlap(self):
+        """Periodic Hann at 50% overlap sums to a constant (COLA) —
+        guarantees every sample is weighted equally by the Welch frames."""
+        n = 128
+        w = np_window("hann", n)
+        total = np.zeros(n * 4)
+        for start in range(0, n * 4 - n + 1, n // 2):
+            total[start:start + n] += w
+        interior = total[n: -n]
+        assert np.allclose(interior, interior[0], atol=1e-12)
+
+    @given(kind=st.sampled_from(["hann", "hamming", "rect"]),
+           n=st.sampled_from([32, 64, 100, 256]))
+    @settings(max_examples=12, deadline=None)
+    def test_window_bounds(self, kind, n):
+        w = np_window(kind, n)
+        assert (w >= -1e-12).all() and (w <= 1.0 + 1e-12).all()
+        assert w.shape == (n,)
+
+
+class TestKernelPropertySweep:
+    @given(hop_div=st.sampled_from([1, 2, 4]),
+           ws_exp=st.integers(6, 8),
+           n_frames=st.integers(3, 20),
+           seed=st.integers(0, 1000))
+    @settings(max_examples=12, deadline=None)
+    def test_fused_welch_matches_oracle(self, hop_div, ws_exp, n_frames,
+                                        seed):
+        ws = 2 ** ws_exp
+        ov = ws - ws // hop_div
+        hop = ws - ov
+        sec = ((n_frames - 1) * hop + ws) / 32768.0
+        p = DepamParams(nfft=ws, window_size=ws, window_overlap=ov,
+                        record_size_sec=sec)
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.standard_normal((2, p.record_size)),
+                        jnp.float32)
+        got = framepsd.welch_psd(x, p, interpret=True)
+        want = ref.welch_psd(x, p)
+        err = float(jnp.max(jnp.abs(got - want) / (jnp.abs(want) + 1e-9)))
+        assert err < 1e-3
+
+    @given(scale=st.floats(0.25, 8.0), seed=st.integers(0, 100))
+    @settings(max_examples=8, deadline=None)
+    def test_kernel_power_scaling(self, scale, seed):
+        p = DepamParams(nfft=128, window_size=128, window_overlap=64,
+                        record_size_sec=0.05)
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.standard_normal((1, p.record_size)),
+                        jnp.float32)
+        a = framepsd.welch_psd(x, p, interpret=True)
+        b = framepsd.welch_psd(x * scale, p, interpret=True)
+        np.testing.assert_allclose(np.asarray(b),
+                                   np.asarray(a) * scale ** 2, rtol=1e-3)
+
+
+class TestDeterminism:
+    def test_train_step_bitwise_deterministic(self):
+        from repro.optim import adamw
+        from repro.train import step as trainstep
+
+        cfg = configs.get("qwen1.5-0.5b", reduced=True)
+        opt = adamw.AdamWConfig()
+        defs = lm.param_defs(cfg, RT)
+        fn = jax.jit(trainstep.make_train_step(
+            cfg, RT, opt, compute_dtype=jnp.float32))
+        toks = jax.random.randint(jax.random.PRNGKey(0), (2, 16), 0,
+                                  cfg.vocab)
+        batch = {"tokens": toks, "labels": toks,
+                 "mask": jnp.ones((2, 16), jnp.float32)}
+        s1 = trainstep.init_train_state(defs, opt)
+        s2 = trainstep.init_train_state(defs, opt)
+        o1, m1 = fn(s1, batch)
+        o2, m2 = fn(s2, batch)
+        assert float(m1["loss"]) == float(m2["loss"])
+        for a, b in zip(jax.tree.leaves(o1["opt"]["master"]),
+                        jax.tree.leaves(o2["opt"]["master"])):
+            assert (np.asarray(a) == np.asarray(b)).all()
