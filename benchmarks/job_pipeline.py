@@ -1,0 +1,49 @@
+"""SoundscapeJob end-to-end throughput + single-pass composition.
+
+The API redesign's performance claim: selecting N features compiles them
+into ONE jitted step sharing the Welch/frame-PSD intermediates, so a
+combined job beats running the features as separate passes over the data.
+This benchmark measures
+
+  * end-to-end GB/min of the full job (device-synthesized records, the
+    paper's headline metric) for the legacy triple and the 4-feature set;
+  * composed single-pass vs sum-of-separate-passes wall time.
+"""
+from __future__ import annotations
+
+from benchmarks import common
+from repro import api
+from repro.core.manifest import DatasetManifest
+from repro.core.params import DepamParams
+
+FEATURES = ("welch", "spl", "tol", "percentiles")
+
+
+def run(n_records=16, record_sec=2.0, iters=3):
+    p = DepamParams(nfft=256, window_size=256, window_overlap=128,
+                    record_size_sec=record_sec)
+    m = DatasetManifest(n_files=1, records_per_file=n_records,
+                        record_size=p.record_size, fs=p.fs, seed=1)
+    rows = []
+
+    def run_feats(*feats):
+        return api.job(m, p).features(*feats).chunk(4).run()
+
+    for feats in (("welch", "spl", "tol"), FEATURES):
+        t = common.timeit(lambda: run_feats(*feats), iters=iters)
+        rows.append(common.row(
+            f"job_pipeline/{'+'.join(feats)}", t * 1e6,
+            f"gb_per_min={m.total_gb / (t / 60):.3f}"))
+
+    t_combined = common.timeit(lambda: run_feats(*FEATURES), iters=iters)
+    t_separate = common.timeit(
+        lambda: [run_feats(f) for f in FEATURES], iters=iters)
+    rows.append(common.row(
+        "job_pipeline/single_pass_vs_separate", t_combined * 1e6,
+        f"separate_us={t_separate * 1e6:.1f};"
+        f"speedup={t_separate / t_combined:.2f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -14,12 +14,14 @@ def main() -> None:
     rows = ["name,us_per_call,derived"]
 
     from benchmarks import fig3_1_single_node, fig3_2_speedup, \
-        table2_1_param_sets, roofline_report
+        job_pipeline, table2_1_param_sets, roofline_report
 
     rows += fig3_1_single_node.run(
         workload_records=(4, 8) if fast else (4, 8, 16))
     rows += fig3_2_speedup.run()
     rows += table2_1_param_sets.run(n_records=2 if fast else 4)
+    rows += job_pipeline.run(n_records=8 if fast else 16,
+                             iters=2 if fast else 3)
     rows += roofline_report.run()
 
     print("\n".join(rows))

@@ -1,26 +1,29 @@
 """Soundscape characterization with fault-tolerant resume — the paper's
-production scenario at miniature scale.
+production scenario at miniature scale, on the SoundscapeJob API.
 
     PYTHONPATH=src python examples/soundscape_ltsa.py
 
 1. writes a small wav dataset (the St-Pierre-et-Miquelon layout in
    miniature: N files x M records);
-2. runs the distributed DEPAM pipeline HALFWAY and "crashes";
-3. restarts: the feature store's committed cursor resumes exactly where
-   the crash happened (idempotent re-execution, like Spark lineage);
-4. verifies the resumed result equals an uninterrupted run.
+2. runs the job HALFWAY into a resumable store and "crashes";
+3. restarts the SAME job expression: the store's committed cursor resumes
+   exactly where the crash happened (idempotent re-execution, like Spark
+   lineage);
+4. verifies the resumed result equals an uninterrupted run, and streams
+   the same features through a callback sink (the live-monitoring shape).
 """
 import tempfile
 
 import numpy as np
 
-from repro.core import pipeline
-from repro.core.manifest import DatasetManifest
+from repro import api
+from repro.core.manifest import DatasetManifest, plan
 from repro.core.params import DepamParams
 from repro.core.store import FeatureStore
-from repro.data.wavio import WavRecordReader, write_dataset
 from repro.data.loader import SpeculativeLoader
-from repro.core.manifest import plan
+from repro.data.wavio import WavRecordReader, write_dataset
+
+FEATURES = ("welch", "spl", "tol", "percentiles")
 
 
 def main():
@@ -32,28 +35,37 @@ def main():
     with tempfile.TemporaryDirectory() as wav_dir, \
             tempfile.TemporaryDirectory() as store_dir:
         write_dataset(wav_dir, m)
-        reader = WavRecordReader(wav_dir, m)
+
+        def soundscape_job():
+            return (api.job(m, p).features(*FEATURES).chunk(4)
+                    .source(api.WavSource(wav_dir)))
 
         # ---- phase 1: run 2 steps, then "crash" ----
-        store = FeatureStore(store_dir)
-        pipeline.run_pipeline(m, p, chunk_records=4, store=store,
-                              reader=reader, max_steps=2)
+        soundscape_job().to(store_dir).limit(2).run()
         print("crashed after 2 committed steps "
-              f"(cursor={store.load_cursor()['cursor']})")
+              f"(cursor={FeatureStore(store_dir).load_cursor()['cursor']})")
 
         # ---- phase 2: restart, resume from the committed cursor ----
-        store2 = FeatureStore(store_dir)
-        resumed = pipeline.run_pipeline(m, p, chunk_records=4,
-                                        store=store2, reader=reader)
-        oneshot = pipeline.run_pipeline(m, p, chunk_records=4,
-                                        reader=reader)
-        ok = np.allclose(resumed["welch"], oneshot["welch"], rtol=1e-6)
-        print(f"resume == uninterrupted: {ok}")
-        print(f"LTSA {resumed['ltsa_db'].shape}, "
+        resumed = soundscape_job().to(store_dir).run()
+        oneshot = soundscape_job().run()
+        ok = all(np.array_equal(np.asarray(resumed[f]), oneshot[f])
+                 for f in FEATURES)
+        print(f"resume == uninterrupted (all {len(FEATURES)} features): {ok}")
+        print(f"welch {resumed['welch'].shape}, "
+              f"percentiles {resumed['percentiles'].shape}, "
               f"mean SPL {np.mean(resumed['spl']):.1f} dB, "
-              f"records {resumed['n_records']}")
+              f"records {resumed.n_records}")
+
+        # ---- phase 3: stream to a callback sink (live monitoring) ----
+        stream_steps = []
+        (soundscape_job()
+         .to(lambda step, idx, vals: stream_steps.append(len(idx)))
+         .run())
+        print(f"callback sink streamed {len(stream_steps)} steps, "
+              f"{sum(stream_steps)} records")
 
         # ---- bonus: host loader with straggler speculation ----
+        reader = WavRecordReader(wav_dir, m)
         ld = SpeculativeLoader(reader, plan(m, 2, 3), workers=4)
         n = sum(1 for _ in ld)
         print(f"speculative loader streamed {n} steps; stats {ld.stats()}")

@@ -1,0 +1,47 @@
+"""Declarative SoundscapeJob API — the user-facing surface of DEPAM.
+
+One scalable engine, many FFT-feature workloads.  The three axes of the
+API compose freely:
+
+  * **features** — a registry of :class:`FeatureSpec` (welch, spl, tol,
+    percentiles, yours): each spec declares its per-record output shape,
+    its jitted per-chunk compute, and an optional epoch aggregator.  All
+    selected features compile into ONE jitted step, so they share the
+    Welch/frame-PSD intermediates and make a single pass over the data.
+  * **sources** — where records come from: device-synthesized
+    (:class:`SynthSource`), wav files (:class:`WavSource`), or any host
+    callback (:class:`ReaderSource`).
+  * **sinks** — where results go: in-memory (:class:`MemorySink`), the
+    resumable feature store (:class:`StoreSink`), or a streaming callback
+    (:class:`CallbackSink`).
+
+The fluent builder ties them together::
+
+    from repro import api
+
+    result = (api.job(manifest, params)
+                 .features("welch", "spl", "tol", "percentiles")
+                 .on(mesh)                      # optional data-parallel mesh
+                 .to("/tmp/depam")              # optional resumable store
+                 .run())
+    result["welch"], result["percentiles"], result["mean_welch"]
+
+Adding a workload is a registry call — no engine, store, or CLI edits::
+
+    api.register(api.FeatureSpec(name="band_energy", ...))
+"""
+from .features import (FeatureContext, FeatureSpec, EpochAggregate,
+                       SPECTRUM_PERCENTILES, feature_names, get_feature,
+                       register, resolve_features, unregister)
+from .sources import ReaderSource, Source, SynthSource, WavSource, as_source
+from .sinks import CallbackSink, MemorySink, Sink, StoreSink, as_sink
+from .job import JobResult, SoundscapeJob, job
+
+__all__ = [
+    "FeatureContext", "FeatureSpec", "EpochAggregate",
+    "SPECTRUM_PERCENTILES", "feature_names", "get_feature", "register",
+    "resolve_features", "unregister",
+    "Source", "SynthSource", "ReaderSource", "WavSource", "as_source",
+    "Sink", "MemorySink", "StoreSink", "CallbackSink", "as_sink",
+    "SoundscapeJob", "JobResult", "job",
+]

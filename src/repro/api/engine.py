@@ -1,0 +1,162 @@
+"""The job engine: compiles selected features into ONE jitted step.
+
+Execution model (unchanged from the paper, Fig 2.1):
+
+  * the *driver* is :func:`run_job` — it owns the ShardPlan, dispatches
+    one jitted step per chunk, and commits progress through the sink;
+  * the *executors* are the mesh devices: each processes its contiguous
+    slice of records entirely locally (the HDFS-locality analogue);
+  * the only collective is the epoch aggregate (a psum of the partials
+    declared by feature specs — the paper's final timestamp join).
+
+What the API redesign changes is *what runs inside the step*: instead of
+a hard-coded welch/spl/tol triple, the engine traces every selected
+:class:`FeatureSpec` against one shared :class:`FeatureContext`, so all
+features — built-in or user-registered — fuse into a single program and
+a single pass over the data.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.manifest import DatasetManifest, ShardPlan
+from repro.core.params import DepamParams
+from .features import FeatureContext, FeatureSpec
+from .sinks import Sink
+from .sources import Source, synth_record
+
+
+@functools.lru_cache(maxsize=64)
+def compile_step(specs: tuple[FeatureSpec, ...], m: DatasetManifest,
+                 p: DepamParams, mesh: Mesh | None,
+                 data_axes: tuple[str, ...], use_kernels: bool,
+                 device_synth: bool) -> Callable:
+    """Build the single jitted per-chunk step for all selected features.
+
+    Takes (payload, mask) where payload is int32 indices (device synth)
+    or float32 waveforms (host-fed), both with (n_shards, chunk) leading
+    layout; returns {feature: (n_shards, chunk, *shape)} with padding
+    slots overwritten by each spec's fill value.
+
+    Cached on the full configuration (specs are frozen dataclasses), so
+    repeated jobs with the same setup reuse one compiled program instead
+    of retracing per run.
+    """
+    consts = {s.name: {k: jnp.asarray(v) for k, v in s.setup(m, p).items()}
+              for s in specs if s.setup is not None}
+
+    def local_step(payload, mask):
+        if device_synth:
+            records = jax.vmap(lambda i: synth_record(i, m))(
+                payload.reshape(-1))
+            records = records.reshape(*payload.shape, m.record_size)
+        else:
+            records = payload
+        lead = records.shape[:-1]
+        ctx = FeatureContext(records.reshape(-1, records.shape[-1]), p,
+                             use_kernels, consts)
+        out = {}
+        for s in specs:
+            val = s.compute(ctx)
+            val = val.reshape(lead + val.shape[1:])
+            fmask = mask.reshape(lead + (1,) * (val.ndim - len(lead)))
+            out[s.name] = jnp.where(fmask, val,
+                                    jnp.asarray(s.fill, val.dtype))
+        return out
+
+    if mesh is None:
+        return jax.jit(local_step)
+
+    shard = NamedSharding(mesh, P(data_axes))
+    return jax.jit(local_step, in_shardings=(shard, shard),
+                   out_shardings=shard)
+
+
+@functools.lru_cache(maxsize=64)
+def compile_aggregate(specs: tuple[FeatureSpec, ...], mesh: Mesh | None,
+                      data_axes: tuple[str, ...]) -> Callable:
+    """Epoch aggregate: per-spec partials + live count, one collective.
+
+    Takes (outputs, mask) and returns {feature: partial, "__live__": n};
+    under a mesh the replicated out_sharding makes XLA insert the psum.
+    """
+    agg_specs = [s for s in specs if s.aggregate is not None]
+
+    def local(out, mask):
+        partials = {s.name: s.aggregate.local(out[s.name], mask)
+                    for s in agg_specs}
+        partials["__live__"] = jnp.sum(mask.astype(jnp.float32))
+        return partials
+
+    if mesh is None:
+        return jax.jit(local)
+
+    shard = NamedSharding(mesh, P(data_axes))
+    rep = NamedSharding(mesh, P())
+    return jax.jit(local, in_shardings=(shard, shard), out_shardings=rep)
+
+
+def run_job(m: DatasetManifest, p: DepamParams, specs: list[FeatureSpec],
+            source: Source, sink: Sink, mesh: Mesh | None,
+            data_axes: tuple[str, ...], pl_: ShardPlan,
+            use_kernels: bool, max_steps: int | None):
+    """Drive the job over plan ``pl_``; resumable when the sink is.
+    Returns (features, epoch, n_records, plan) — see job.JobResult."""
+    source = source.bind(m, p)
+    shapes = {s.name: tuple(s.shape(m, p)) for s in specs}
+
+    step_fn = compile_step(tuple(specs), m, p, mesh, data_axes,
+                           use_kernels, source.device_synth)
+    agg_fn = compile_aggregate(tuple(specs), mesh, data_axes)
+
+    sink.open(m, p, shapes, pl_)
+    agg_specs = [s for s in specs if s.aggregate is not None]
+    agg_state = {
+        s.name: np.zeros(s.aggregate.partial_shape(m, p)
+                         if s.aggregate.partial_shape else shapes[s.name],
+                         np.float64)
+        for s in agg_specs}
+    live = 0.0
+    start_step, resumed = sink.resume_state()
+    if resumed is not None:
+        prev_agg, prev_live = resumed
+        live = prev_live
+        for name, total in prev_agg.items():
+            if name in agg_state:
+                agg_state[name] = np.asarray(total, np.float64)
+
+    n_steps = pl_.n_steps if max_steps is None \
+        else min(pl_.n_steps, max_steps)
+    for step in range(start_step, n_steps):
+        idx = pl_.step_indices(step)
+        mask = pl_.step_mask(step)
+        if source.device_synth:
+            payload = jnp.asarray(idx, jnp.int32)
+        else:
+            payload = jnp.asarray(source.fetch(idx), jnp.float32)
+        out = step_fn(payload, jnp.asarray(mask))
+        partials = agg_fn(out, jnp.asarray(mask))
+        live += float(partials.pop("__live__"))
+        for name, part in partials.items():
+            agg_state[name] += np.asarray(part, np.float64)
+
+        flat_idx = idx.reshape(-1)
+        keep = mask.reshape(-1)
+        sel = flat_idx[keep]
+        values = {
+            name: np.asarray(out[name]).reshape(
+                (-1,) + shapes[name])[keep]
+            for name in shapes}
+        sink.write(step, sel, values)
+        sink.commit(pl_, step, agg_state, live)
+
+    epoch = {s.aggregate.out_name: s.aggregate.finalize(agg_state[s.name],
+                                                        live)
+             for s in agg_specs}
+    return sink.result(), epoch, int(live), pl_

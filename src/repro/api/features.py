@@ -1,0 +1,210 @@
+"""The feature registry: what the engine knows how to compute.
+
+A :class:`FeatureSpec` is the unit of extensibility.  It declares
+
+  * ``shape(manifest, params)`` — the per-record trailing shape, which is
+    all the store needs to lay out its memmap;
+  * ``compute(ctx)`` — a traceable function from the shared
+    :class:`FeatureContext` (records + cached Welch / frame-PSD
+    intermediates) to a ``(batch, *shape)`` array;
+  * ``fill`` — the value written into padding slots beyond the manifest
+    end (0 for linear power, -inf for dB levels);
+  * optional ``setup(manifest, params)`` — host-side constants (e.g. the
+    TOL band matrix) baked into the jitted step;
+  * optional ``aggregate`` — a named epoch-level reduction (the
+    pipeline's single collective).
+
+Because every selected spec computes from the SAME context inside ONE
+jitted step, features compose in a single pass over the data and share
+intermediates: selecting ("welch", "spl", "tol") runs the Welch PSD once.
+
+Registering a new feature requires no engine, store, or CLI changes —
+``percentiles`` below is the proof: pypam-style per-record spectrum
+percentile statistics added purely through this registry.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax.numpy as jnp
+
+from repro.core import spectra
+from repro.core.manifest import DatasetManifest
+from repro.core.params import DepamParams
+from repro.core.tol import band_matrix as make_band_matrix
+from repro.kernels import ops
+
+
+class FeatureContext:
+    """Shared per-trace state handed to every ``FeatureSpec.compute``.
+
+    ``records`` is the flat ``(batch, record_size)`` waveform batch on one
+    device.  Expensive intermediates (Welch PSD, per-frame PSD) are
+    computed lazily and cached, so N features selecting the same
+    intermediate trace it exactly once.
+    """
+
+    def __init__(self, records: jnp.ndarray, params: DepamParams,
+                 use_kernels: bool, consts: dict[str, dict]):
+        self.records = records
+        self.params = params
+        self.use_kernels = use_kernels
+        self._consts = consts
+        self._cache: dict[str, jnp.ndarray] = {}
+
+    def const(self, feature: str, name: str) -> jnp.ndarray:
+        """A host-side constant declared by ``FeatureSpec.setup``."""
+        return self._consts[feature][name]
+
+    @property
+    def welch(self) -> jnp.ndarray:
+        """(batch, n_bins) Welch PSD, Pallas kernel or XLA path."""
+        if "welch" not in self._cache:
+            fn = ops.welch_psd if self.use_kernels else spectra.welch_psd
+            self._cache["welch"] = fn(self.records, self.params)
+        return self._cache["welch"]
+
+    @property
+    def frame_psd(self) -> jnp.ndarray:
+        """(batch, n_frames, n_bins) per-frame PSD (the spectrogram)."""
+        if "frame_psd" not in self._cache:
+            fn = ops.frame_psd if self.use_kernels else spectra.frame_psd
+            self._cache["frame_psd"] = fn(self.records, self.params)
+        return self._cache["frame_psd"]
+
+
+@dataclasses.dataclass(frozen=True)
+class EpochAggregate:
+    """Epoch-level reduction over all live records (one collective).
+
+    ``local(value, mask)`` reduces a step's masked feature values to a
+    partial of shape ``partial_shape`` (defaults to the feature shape);
+    the engine psums partials across the mesh and accumulates them in
+    float64 on the host.  ``finalize(total, live)`` maps the accumulated
+    partial + live-record count to the epoch value published under
+    ``out_name`` in ``JobResult.epoch``.
+    """
+
+    out_name: str
+    local: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
+    finalize: Callable
+    partial_shape: Callable[[DatasetManifest, DepamParams],
+                            tuple[int, ...]] | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class FeatureSpec:
+    """A registered feature workload (see module docstring)."""
+
+    name: str
+    shape: Callable[[DatasetManifest, DepamParams], tuple[int, ...]]
+    compute: Callable[[FeatureContext], jnp.ndarray]
+    fill: float = 0.0
+    setup: Callable[[DatasetManifest, DepamParams], dict] | None = None
+    aggregate: EpochAggregate | None = None
+    doc: str = ""
+
+
+_REGISTRY: dict[str, FeatureSpec] = {}
+
+
+def register(spec: FeatureSpec, *, overwrite: bool = False) -> FeatureSpec:
+    """Add a feature to the registry; returns the spec for chaining."""
+    if spec.name in _REGISTRY and not overwrite:
+        raise ValueError(
+            f"feature {spec.name!r} already registered "
+            f"(pass overwrite=True to replace)")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def unregister(name: str) -> None:
+    _REGISTRY.pop(name, None)
+
+
+def get_feature(name: str) -> FeatureSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown feature {name!r}; registered: "
+                       f"{sorted(_REGISTRY)}") from None
+
+
+def feature_names() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def resolve_features(feats: Sequence[str | FeatureSpec]) -> list[FeatureSpec]:
+    """Names and/or inline specs -> specs, order preserved, no dups."""
+    out: list[FeatureSpec] = []
+    seen: set[str] = set()
+    for f in feats:
+        spec = f if isinstance(f, FeatureSpec) else get_feature(f)
+        if spec.name in seen:
+            raise ValueError(f"feature {spec.name!r} selected twice")
+        seen.add(spec.name)
+        out.append(spec)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Built-in features — the paper's workload, as registry entries.
+# ---------------------------------------------------------------------------
+
+def _welch_partial(value: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sum(value * mask[..., None],
+                   axis=tuple(range(value.ndim - 1)))
+
+
+register(FeatureSpec(
+    name="welch",
+    shape=lambda m, p: (p.n_bins,),
+    compute=lambda ctx: ctx.welch,
+    fill=0.0,
+    aggregate=EpochAggregate(
+        out_name="mean_welch",
+        local=_welch_partial,
+        finalize=lambda total, live: total / max(live, 1.0)),
+    doc="Per-record Welch PSD (linear, scipy 'density' scaling)."))
+
+
+register(FeatureSpec(
+    name="spl",
+    shape=lambda m, p: (),
+    compute=lambda ctx: spectra.spl_wideband(ctx.welch, ctx.params),
+    fill=-float("inf"),
+    doc="Wideband SPL per record, dB re 1 uPa."))
+
+
+register(FeatureSpec(
+    name="tol",
+    shape=lambda m, p: (make_band_matrix(p).shape[1],),
+    setup=lambda m, p: {"band_matrix": make_band_matrix(p)},
+    compute=lambda ctx: (
+        (ops.tol_levels if ctx.use_kernels else spectra.tol_levels)(
+            ctx.welch, ctx.const("tol", "band_matrix"), ctx.params)),
+    fill=-float("inf"),
+    doc="Third-octave levels per record, dB (IEC 61260 base-10 bands)."))
+
+
+# pypam-style soundscape statistics: per-record percentiles of the frame
+# spectrogram (dB), per frequency bin.  The extensibility proof — a new
+# workload added with zero engine/store edits.
+SPECTRUM_PERCENTILES = (1.0, 5.0, 25.0, 50.0, 75.0, 95.0, 99.0)
+
+
+def _percentiles_compute(ctx: FeatureContext) -> jnp.ndarray:
+    p = ctx.params
+    db = 10.0 * jnp.log10(jnp.maximum(ctx.frame_psd, 1e-30)) + p.gain_db
+    q = jnp.asarray(SPECTRUM_PERCENTILES, db.dtype)
+    pct = jnp.percentile(db, q, axis=-2)       # (n_pct, batch, n_bins)
+    return jnp.moveaxis(pct, 0, 1)             # (batch, n_pct, n_bins)
+
+
+register(FeatureSpec(
+    name="percentiles",
+    shape=lambda m, p: (len(SPECTRUM_PERCENTILES), p.n_bins),
+    compute=_percentiles_compute,
+    fill=-float("inf"),
+    doc="Spectrum percentile levels per record (dB), pypam-style."))

@@ -1,0 +1,140 @@
+"""The fluent SoundscapeJob builder — the one user-facing entry point.
+
+::
+
+    from repro import api
+
+    result = (api.job(manifest, params)
+                 .features("welch", "spl", "tol", "percentiles")
+                 .on(mesh)            # optional: data-parallel mesh
+                 .source("/wavs")     # optional: default device synthesis
+                 .to("/tmp/depam")    # optional: default in-memory
+                 .chunk(8)
+                 .run())
+
+Every setter returns the job, so configurations read as one expression;
+``run()`` compiles all selected features into a single jitted step and
+drives the sharded plan to completion (resuming if the sink supports it).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core.manifest import DatasetManifest, ShardPlan, plan
+from repro.core.params import DepamParams
+from . import engine
+from .features import FeatureSpec, resolve_features
+from .sinks import Sink, as_sink
+from .sources import Source, as_source
+
+
+@dataclasses.dataclass
+class JobResult:
+    """Outputs of one SoundscapeJob run.
+
+    ``features`` maps feature name -> (n_records, *shape) array (None
+    for streaming sinks); ``epoch`` holds aggregate outputs such as
+    ``mean_welch``.  ``result[name]`` looks up either.
+    """
+
+    features: dict[str, np.ndarray] | None
+    epoch: dict[str, np.ndarray]
+    n_records: int
+    plan: ShardPlan
+
+    def __getitem__(self, name: str):
+        if self.features is not None and name in self.features:
+            return self.features[name]
+        if name in self.epoch:
+            return self.epoch[name]
+        raise KeyError(
+            f"{name!r} not in features "
+            f"{sorted(self.features or ())} or epoch {sorted(self.epoch)}")
+
+
+class SoundscapeJob:
+    """Builder for one pass of selected features over a manifest."""
+
+    def __init__(self, manifest: DatasetManifest, params: DepamParams):
+        self._m = manifest
+        self._p = params
+        self._features: list[str | FeatureSpec] = ["welch", "spl", "tol"]
+        self._mesh: Mesh | None = None
+        self._data_axes: tuple[str, ...] = ("data",)
+        self._source = None
+        self._sink = None
+        self._chunk = 8
+        self._use_kernels = True
+        self._max_steps: int | None = None
+
+    def features(self, *feats: str | FeatureSpec) -> "SoundscapeJob":
+        """Select registered feature names and/or inline FeatureSpecs."""
+        if not feats:
+            raise ValueError("select at least one feature")
+        self._features = list(feats)
+        return self
+
+    def on(self, mesh: Mesh | None,
+           data_axes: tuple[str, ...] = ("data",)) -> "SoundscapeJob":
+        """Shard the job over ``data_axes`` of a device mesh."""
+        self._mesh = mesh
+        self._data_axes = tuple(data_axes)
+        return self
+
+    def source(self, src) -> "SoundscapeJob":
+        """Where records come from: Source, reader callable, wav dir
+        path, or None for on-device synthesis."""
+        self._source = src
+        return self
+
+    def to(self, sink) -> "SoundscapeJob":
+        """Where results go: Sink, FeatureStore, store path, or a
+        streaming callback ``fn(step, indices, values)``."""
+        self._sink = sink
+        return self
+
+    def chunk(self, records: int) -> "SoundscapeJob":
+        """Records per shard per step (the chunk size)."""
+        self._chunk = int(records)
+        return self
+
+    def kernels(self, enabled: bool) -> "SoundscapeJob":
+        """Toggle the Pallas kernel path (True) vs XLA fallback."""
+        self._use_kernels = bool(enabled)
+        return self
+
+    def limit(self, max_steps: int | None) -> "SoundscapeJob":
+        """Stop after ``max_steps`` plan steps (crash injection/tests)."""
+        self._max_steps = max_steps
+        return self
+
+    def _plan(self) -> ShardPlan:
+        n_shards = 1
+        if self._mesh is not None:
+            n_shards = int(np.prod([self._mesh.shape[a]
+                                    for a in self._data_axes]))
+        return plan(self._m, n_shards, self._chunk)
+
+    def resume_step(self) -> int:
+        """The plan step a run() would resume at (0 = from scratch) —
+        the sink's committed progress against this job's plan."""
+        return as_sink(self._sink).committed_steps(self._plan())
+
+    def run(self) -> JobResult:
+        specs = resolve_features(self._features)
+        source: Source = as_source(self._source)
+        sink: Sink = as_sink(self._sink)
+        features, epoch, n_records, pl_ = engine.run_job(
+            self._m, self._p, specs, source, sink, self._mesh,
+            self._data_axes, self._plan(), self._use_kernels,
+            self._max_steps)
+        return JobResult(features=features, epoch=epoch,
+                         n_records=n_records, plan=pl_)
+
+
+def job(manifest: DatasetManifest, params: DepamParams) -> SoundscapeJob:
+    """Start a SoundscapeJob over ``manifest`` with ``params``."""
+    return SoundscapeJob(manifest, params)

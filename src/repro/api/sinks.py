@@ -1,0 +1,151 @@
+"""Result sinks — where features go.
+
+The engine hands every sink the same three things:
+
+  * ``open(manifest, params, shapes, plan)`` — the full memmap-style
+    layout, ``{feature: per_record_shape}``, before the first step;
+  * ``write(step, indices, values)`` — the live (non-padding) records of
+    one step: ``indices`` are global record ids, ``values`` maps feature
+    name to ``(len(indices), *shape)`` arrays;
+  * ``commit(plan, step, agg, live)`` — called after each step with the
+    accumulated epoch-aggregate state (fault-tolerance hook).
+
+``as_sink`` normalizes what users pass to ``SoundscapeJob.to()``: ``None``
+-> in-memory arrays, a path string or ``FeatureStore`` -> the resumable
+store, a callable -> streaming callback, a ``Sink`` -> itself.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import numpy as np
+
+from repro.core.manifest import DatasetManifest, ShardPlan
+from repro.core.params import DepamParams
+from repro.core.store import FeatureStore
+
+
+class Sink:
+    resumable: bool = False
+
+    def open(self, m: DatasetManifest, p: DepamParams,
+             shapes: dict[str, tuple[int, ...]], plan: ShardPlan) -> None:
+        pass
+
+    def resume_state(self):
+        """(start_step, (agg, live) | None) — only resumable sinks skip."""
+        return 0, None
+
+    def committed_steps(self, plan: ShardPlan) -> int:
+        """Steps of ``plan`` already durably committed (0 unless
+        resumable)."""
+        return 0
+
+    def write(self, step: int, indices: np.ndarray,
+              values: dict[str, np.ndarray]) -> None:
+        raise NotImplementedError
+
+    def commit(self, plan: ShardPlan, step: int,
+               agg: dict[str, np.ndarray], live: float) -> None:
+        pass
+
+    def result(self) -> dict[str, np.ndarray] | None:
+        """Feature arrays keyed by name, or None for streaming sinks."""
+        return None
+
+
+class MemorySink(Sink):
+    """Plain numpy arrays, one (n_records, *shape) per feature."""
+
+    def __init__(self):
+        self.arrays: dict[str, np.ndarray] | None = None
+
+    def open(self, m, p, shapes, plan):
+        self.arrays = {name: np.zeros((m.n_records,) + shape, np.float32)
+                       for name, shape in shapes.items()}
+
+    def write(self, step, indices, values):
+        for name, vals in values.items():
+            self.arrays[name][indices] = vals
+
+    def result(self):
+        return self.arrays
+
+
+class StoreSink(Sink):
+    """Resumable memmap-backed sink over :class:`FeatureStore`.
+
+    The store lays out one ``(n_records, *shape)`` memmap per registered
+    feature and commits a cursor + epoch-aggregate state after every
+    step, so a killed job restarts exactly where it crashed — for ANY
+    feature set, not just the legacy welch/spl/tol triple.
+    """
+
+    resumable = True
+
+    def __init__(self, store: FeatureStore | str):
+        self.store = FeatureStore(store) if isinstance(store, str) else store
+        self.arrays: dict[str, np.memmap] | None = None
+        self._plan: ShardPlan | None = None
+
+    def open(self, m, p, shapes, plan):
+        self._plan = plan
+        committed = self.store.committed_steps(plan)
+        if committed > 0:
+            # The cursor covers steps a just-added feature never ran
+            # for — resuming would silently leave its fill values on
+            # disk.  Validate BEFORE open_arrays creates any file, so a
+            # retried job cannot slip past the guard.
+            missing = sorted(n for n in shapes
+                             if not self.store.array_exists(n))
+            if missing:
+                raise ValueError(
+                    f"cannot resume: features {missing} have no data "
+                    f"for the {committed} already-committed steps "
+                    f"(added after the store was written?); use a fresh "
+                    f"store directory or drop them from the job")
+        self.arrays = self.store.open_arrays(
+            {name: (m.n_records,) + shape for name, shape in shapes.items()})
+
+    def resume_state(self):
+        start = self.store.committed_steps(self._plan)
+        if start <= 0:
+            return 0, None
+        return start, self.store.load_agg()
+
+    def committed_steps(self, plan) -> int:
+        return self.store.committed_steps(plan)
+
+    def write(self, step, indices, values):
+        for name, vals in values.items():
+            self.arrays[name][indices] = vals
+
+    def commit(self, plan, step, agg, live):
+        self.store.commit_state(plan, step, agg, live)
+
+    def result(self):
+        return self.arrays
+
+
+class CallbackSink(Sink):
+    """Streaming sink: ``fn(step, indices, values)`` per step, nothing
+    retained — the shape for live dashboards / downstream queues."""
+
+    def __init__(self, fn: Callable[[int, np.ndarray, dict], None]):
+        self.fn = fn
+
+    def write(self, step, indices, values):
+        self.fn(step, indices, values)
+
+
+def as_sink(sink) -> Sink:
+    """Normalize a user-supplied sink (see module docstring)."""
+    if sink is None:
+        return MemorySink()
+    if isinstance(sink, Sink):
+        return sink
+    if isinstance(sink, (FeatureStore, str)):
+        return StoreSink(sink)
+    if callable(sink):
+        return CallbackSink(sink)
+    raise TypeError(f"cannot interpret {type(sink).__name__} as a Sink")

@@ -1,0 +1,110 @@
+"""Record sources — where waveforms come from.
+
+Two execution modes, unified behind one interface:
+
+  * **device-synthesized** (``SynthSource``): the step function receives
+    record *indices* and regenerates waveforms on-device from the
+    manifest seed — byte-exact Spark-lineage recompute semantics (any
+    worker can regenerate any record) and zero host IO;
+  * **host-fed** (``ReaderSource`` / ``WavSource``): the driver fetches
+    ``(n_shards, chunk, record_size)`` waveforms on the host (wav files,
+    object stores, live hydrophone callbacks) and ships them to devices.
+
+``as_source`` normalizes what users pass to ``SoundscapeJob.source()``:
+``None`` -> synthesis, a callable -> ``ReaderSource``, a path string ->
+``WavSource``, a ``Source`` -> itself.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.manifest import DatasetManifest
+from repro.core.params import DepamParams
+
+
+def synth_record(idx: jnp.ndarray, m: DatasetManifest) -> jnp.ndarray:
+    """Deterministic synthetic PAM record for a global record index.
+
+    Colored-ish noise + a ship-like tonal + a burst of clicks, all keyed by
+    the record index so regeneration is byte-exact (lineage property).
+    idx: scalar int32 -> (record_size,) float32.
+    """
+    key = jax.random.fold_in(jax.random.PRNGKey(m.seed), idx)
+    k1, k2, k3 = jax.random.split(key, 3)
+    t = jnp.arange(m.record_size, dtype=jnp.float32) / m.fs
+    noise = jax.random.normal(k1, (m.record_size,), jnp.float32)
+    # crude red tilt: one-pole smoothing via cumsum decay approximation
+    tone_f = 50.0 + 400.0 * jax.random.uniform(k2)
+    tone = 0.3 * jnp.sin(2 * jnp.pi * tone_f * t)
+    click_phase = jax.random.uniform(k3) * 0.9
+    clicks = 2.0 * jnp.exp(-((t / t[-1] - click_phase) ** 2) * 4e5) \
+        * jnp.sin(2 * jnp.pi * 9000.0 * t)
+    return noise + tone + clicks
+
+
+class Source:
+    """Base class.  ``device_synth`` sources hand indices to the jitted
+    step (which regenerates records on-device); host-fed sources
+    implement ``fetch``."""
+
+    device_synth: bool = False
+
+    def bind(self, m: DatasetManifest, p: DepamParams) -> "Source":
+        """Late-bind the manifest/params at job start; returns self."""
+        return self
+
+    def fetch(self, indices: np.ndarray) -> np.ndarray:
+        """(n_shards, chunk) global indices -> (n_shards, chunk,
+        record_size) float32 waveforms (zeros for padding slots)."""
+        raise NotImplementedError
+
+
+class SynthSource(Source):
+    """On-device synthesis from the manifest seed (no host IO)."""
+
+    device_synth = True
+
+
+class ReaderSource(Source):
+    """Any host callback ``indices -> waveforms`` (e.g. WavRecordReader,
+    a SpeculativeLoader-backed reader, or a live-stream shim)."""
+
+    def __init__(self, reader: Callable[[np.ndarray], np.ndarray]):
+        self.reader = reader
+
+    def fetch(self, indices: np.ndarray) -> np.ndarray:
+        return np.asarray(self.reader(indices), np.float32)
+
+
+class WavSource(Source):
+    """Seek-based reads from a directory of manifest-layout wav files."""
+
+    def __init__(self, root: str):
+        self.root = root
+        self._reader: Callable | None = None
+
+    def bind(self, m: DatasetManifest, p: DepamParams) -> "WavSource":
+        from repro.data.wavio import WavRecordReader
+        self._reader = WavRecordReader(self.root, m)
+        return self
+
+    def fetch(self, indices: np.ndarray) -> np.ndarray:
+        assert self._reader is not None, "WavSource used before bind()"
+        return np.asarray(self._reader(indices), np.float32)
+
+
+def as_source(src) -> Source:
+    """Normalize a user-supplied source (see module docstring)."""
+    if src is None:
+        return SynthSource()
+    if isinstance(src, Source):
+        return src
+    if isinstance(src, str):
+        return WavSource(src)
+    if callable(src):
+        return ReaderSource(src)
+    raise TypeError(f"cannot interpret {type(src).__name__} as a Source")

@@ -1,163 +1,31 @@
-"""The distributed DEPAM pipeline — Spark executors as mesh devices.
+"""Legacy pipeline entry point — now a thin shim over ``repro.api``.
 
-Execution model (mirrors paper Fig 2.1):
+The distributed DEPAM engine lives in :mod:`repro.api`: a feature
+registry (welch/spl/tol/percentiles/...), Source and Sink abstractions,
+and a ``SoundscapeJob`` builder whose engine compiles every selected
+feature into one jitted step (see ``repro/api/engine.py`` for the
+driver/executor execution model inherited from the paper's Fig 2.1).
 
-  * the *driver* is the host Python loop (`run_pipeline`): it owns the
-    ShardPlan (the DAG of stages), dispatches one jitted step per chunk,
-    and commits progress to the feature store (fault tolerance);
-  * the *executors* are the mesh devices under ``shard_map``: each one
-    processes its own contiguous slice of records — segmentation, windowed
-    DFT, PSD, Welch/SPL/TOL — entirely locally, exactly like the paper's
-    "HDFS blocks are read locally, avoiding network transfer";
-  * the only collective is the optional epoch aggregate (mean spectrum /
-    record count), the analogue of the paper's final timestamp join.
+This module keeps the original ``run_pipeline()`` call signature and
+return payload for existing callers and scripts; new code should use::
 
-Records can be *host-fed* (real waveforms, e.g. decoded wav files) or
-*device-synthesized*: a pure function record_index -> waveform, which gives
-byte-exact Spark-lineage recompute semantics (any worker can regenerate any
-record) and removes host IO from scalability benchmarks.
+    from repro import api
+    api.job(manifest, params).features("welch", "spl", "tol").run()
+
+``synth_record`` is re-exported from :mod:`repro.api.sources` (its
+canonical home) for callers that reference the synthesizer directly.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Callable
 
-import jax
-import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
-from repro.kernels import ops
-from . import spectra
-from .manifest import DatasetManifest, ShardPlan, plan, replan
+from repro.api import job
+from repro.api.sources import synth_record  # noqa: F401  (re-export)
+from .manifest import DatasetManifest
 from .params import DepamParams
-from .tol import band_matrix as make_band_matrix
-
-
-def synth_record(idx: jnp.ndarray, m: DatasetManifest) -> jnp.ndarray:
-    """Deterministic synthetic PAM record for a global record index.
-
-    Colored-ish noise + a ship-like tonal + a burst of clicks, all keyed by
-    the record index so regeneration is byte-exact (lineage property).
-    idx: scalar int32 -> (record_size,) float32.
-    """
-    key = jax.random.fold_in(jax.random.PRNGKey(m.seed), idx)
-    k1, k2, k3 = jax.random.split(key, 3)
-    t = jnp.arange(m.record_size, dtype=jnp.float32) / m.fs
-    noise = jax.random.normal(k1, (m.record_size,), jnp.float32)
-    # crude red tilt: one-pole smoothing via cumsum decay approximation
-    tone_f = 50.0 + 400.0 * jax.random.uniform(k2)
-    tone = 0.3 * jnp.sin(2 * jnp.pi * tone_f * t)
-    click_phase = jax.random.uniform(k3) * 0.9
-    clicks = 2.0 * jnp.exp(-((t / t[-1] - click_phase) ** 2) * 4e5) \
-        * jnp.sin(2 * jnp.pi * 9000.0 * t)
-    return noise + tone + clicks
-
-
-@dataclasses.dataclass(frozen=True)
-class PipelineOutputs:
-    """Per-record features for one step (leading dims: shard, chunk)."""
-
-    welch: jnp.ndarray      # (..., n_bins) linear PSD
-    spl: jnp.ndarray        # (...,) dB
-    tol: jnp.ndarray | None # (..., n_bands) dB
-
-
-jax.tree_util.register_dataclass(
-    PipelineOutputs, data_fields=["welch", "spl", "tol"], meta_fields=[])
-
-
-def _features_local(records: jnp.ndarray, p: DepamParams,
-                    band_m: jnp.ndarray | None, use_kernels: bool) -> PipelineOutputs:
-    """records: (chunk, record_size) on ONE device -> features."""
-    if use_kernels:
-        welch = ops.welch_psd(records, p)
-    else:
-        welch = spectra.welch_psd(records, p)
-    spl = spectra.spl_wideband(welch, p)
-    tol = None
-    if band_m is not None:
-        if use_kernels:
-            tol = ops.tol_levels(welch, band_m, p)
-        else:
-            tol = spectra.tol_levels(welch, band_m, p)
-    return PipelineOutputs(welch=welch, spl=spl, tol=tol)
-
-
-def make_step(p: DepamParams, mesh: Mesh | None = None,
-              data_axes: tuple[str, ...] = ("data",),
-              with_tol: bool = True, use_kernels: bool = True,
-              manifest: DatasetManifest | None = None,
-              ) -> Callable:
-    """Build the jitted per-chunk step.
-
-    If ``manifest`` is given the step takes (indices, mask) and synthesizes
-    records on-device; otherwise it takes (records, mask) host-fed.
-    Returns features with the same (n_shards, chunk) leading layout,
-    sharded over ``data_axes`` when a mesh is given.
-    """
-    band_m = jnp.asarray(make_band_matrix(p)) if with_tol else None
-
-    def local_step(payload, mask):
-        if manifest is not None:
-            records = jax.vmap(lambda i: synth_record(i, manifest))(
-                payload.reshape(-1))
-            records = records.reshape(*payload.shape, manifest.record_size)
-        else:
-            records = payload
-        chunk = records.shape[-2]
-        out = _features_local(records.reshape(-1, records.shape[-1]), p,
-                              band_m, use_kernels)
-        out = jax.tree.map(
-            lambda a: a.reshape(records.shape[:-1] + a.shape[1:]), out)
-        # mask padding records (beyond manifest end)
-        fmask = mask[..., None].astype(out.welch.dtype)
-        return PipelineOutputs(
-            welch=out.welch * fmask,
-            spl=jnp.where(mask, out.spl, -jnp.inf),
-            tol=None if out.tol is None else
-                jnp.where(mask[..., None], out.tol, -jnp.inf))
-
-    if mesh is None:
-        return jax.jit(local_step)
-
-    pspec = P(data_axes)
-    shard = NamedSharding(mesh, pspec)
-
-    @functools.partial(jax.jit,
-                       in_shardings=(shard, shard),
-                       out_shardings=NamedSharding(mesh, pspec))
-    def sharded_step(payload, mask):
-        return local_step(payload, mask)
-
-    return sharded_step
-
-
-def make_aggregate(mesh: Mesh | None = None,
-                   data_axes: tuple[str, ...] = ("data",)) -> Callable:
-    """Epoch-level aggregate: sum of welch PSDs + live-record count.
-
-    This is the pipeline's single collective (the paper's timestamp join):
-    a psum over the data axes of per-shard partial sums.
-    """
-    def local(welch, mask):
-        w = jnp.sum(welch * mask[..., None], axis=tuple(range(welch.ndim - 1)))
-        n = jnp.sum(mask.astype(jnp.float32))
-        return w, n
-
-    if mesh is None:
-        return jax.jit(local)
-
-    shard = NamedSharding(mesh, P(data_axes))
-    rep = NamedSharding(mesh, P())
-
-    @functools.partial(jax.jit, in_shardings=(shard, shard),
-                       out_shardings=(rep, rep))
-    def agg(welch, mask):
-        return local(welch, mask)   # XLA inserts the all-reduce
-
-    return agg
 
 
 def run_pipeline(m: DatasetManifest, p: DepamParams,
@@ -172,62 +40,20 @@ def run_pipeline(m: DatasetManifest, p: DepamParams,
 
     reader: optional host function global_indices((n_shards, chunk)) ->
     waveforms (n_shards, chunk, record_size); defaults to device synthesis.
-    Returns (ltsa_db, spl, tol, mean_welch) as numpy arrays.
+    Returns the legacy dict (ltsa_db, welch, spl, tol, mean_welch, ...).
     """
-    n_shards = 1
-    if mesh is not None:
-        n_shards = int(np.prod([mesh.shape[a] for a in data_axes]))
-    pl_ = plan(m, n_shards, chunk_records)
-
-    step_fn = make_step(p, mesh, data_axes, with_tol, use_kernels,
-                        manifest=None if reader is not None else m)
-    agg_fn = make_aggregate(mesh, data_axes)
-
-    start_step = 0
-    welch_sum = np.zeros(p.n_bins, np.float64)
-    live = 0.0
+    feats = ["welch", "spl"] + (["tol"] if with_tol else [])
+    j = (job(m, p).features(*feats).on(mesh, data_axes)
+         .chunk(chunk_records).kernels(use_kernels).limit(max_steps))
+    if reader is not None:
+        j = j.source(reader)
     if store is not None:
-        start_step = store.committed_steps(pl_)
-        st = store.load_cursor()
-        if st is not None and start_step > 0:
-            welch_sum = np.asarray(st["welch_sum"], np.float64)
-            live = float(st["live"])
-    results = {"welch": np.zeros((m.n_records, p.n_bins), np.float32),
-               "spl": np.zeros(m.n_records, np.float32)}
-    if with_tol:
-        n_bands = make_band_matrix(p).shape[1]
-        results["tol"] = np.zeros((m.n_records, n_bands), np.float32)
-    if store is not None:
-        results = store.arrays(m, p, with_tol)
+        j = j.to(store)
+    res = j.run()
 
-    n_steps = pl_.n_steps if max_steps is None else min(pl_.n_steps, max_steps)
-    for step in range(start_step, n_steps):
-        idx = pl_.step_indices(step)
-        mask = pl_.step_mask(step)
-        if reader is not None:
-            payload = jnp.asarray(reader(idx), jnp.float32)
-        else:
-            payload = jnp.asarray(idx, jnp.int32)
-        out = step_fn(payload, jnp.asarray(mask))
-        w_s, n_s = agg_fn(out.welch, jnp.asarray(mask))
-        welch_sum += np.asarray(w_s, np.float64)
-        live += float(n_s)
-
-        flat_idx = idx.reshape(-1)
-        keep = mask.reshape(-1)
-        sel = flat_idx[keep]
-        results["welch"][sel] = np.asarray(out.welch).reshape(
-            -1, p.n_bins)[keep]
-        results["spl"][sel] = np.asarray(out.spl).reshape(-1)[keep]
-        if with_tol and out.tol is not None:
-            results["tol"][sel] = np.asarray(out.tol).reshape(
-                len(keep), -1)[keep]
-        if store is not None:
-            store.commit(pl_, step, welch_sum, live)
-
-    mean_welch = welch_sum / max(live, 1.0)
-    ltsa_db = 10.0 * np.log10(np.maximum(results["welch"], 1e-30)) + p.gain_db
-    return {"ltsa_db": ltsa_db, "welch": results["welch"],
-            "spl": results["spl"], "tol": results.get("tol"),
-            "mean_welch": mean_welch, "n_records": int(live),
-            "plan": pl_}
+    welch = res.features["welch"]
+    ltsa_db = 10.0 * np.log10(np.maximum(welch, 1e-30)) + p.gain_db
+    return {"ltsa_db": ltsa_db, "welch": welch,
+            "spl": res.features["spl"], "tol": res.features.get("tol"),
+            "mean_welch": res.epoch["mean_welch"],
+            "n_records": res.n_records, "plan": res.plan}

@@ -1,11 +1,15 @@
 """Resumable feature store for pipeline outputs (fault-tolerance layer).
 
-Results (LTSA rows, SPL, TOL) live in memory-mapped .npy files; progress is
-a cursor JSON committed with write-to-temp + atomic rename, so a crash at
-any point leaves either the old or the new cursor — never a torn state.
-On resume, the committed cursor tells the driver which plan steps to skip;
-any step that was in flight when the job died is recomputed (idempotent:
-the manifest is deterministic and writes are per-record).
+Results live in memory-mapped .npy files — one ``(n_records, *shape)``
+array per feature, laid out from whatever shapes the feature registry
+declares (``open_arrays``), so new workloads need no store changes.
+Progress is a cursor JSON committed with write-to-temp + atomic rename,
+so a crash at any point leaves either the old or the new cursor — never
+a torn state.  On resume, the committed cursor tells the driver which
+plan steps to skip; any step that was in flight when the job died is
+recomputed (idempotent: the manifest is deterministic and writes are
+per-record).  Epoch-aggregate partial sums ride along in the cursor so
+aggregates also survive the crash.
 """
 from __future__ import annotations
 
@@ -26,30 +30,63 @@ class FeatureStore:
         self._arrays: dict[str, np.memmap] | None = None
 
     # -- result arrays ------------------------------------------------
-    def arrays(self, m: DatasetManifest, p: DepamParams, with_tol: bool):
+    def _array_path(self, name: str) -> str:
+        return os.path.join(self.root, f"{name}.npy")
+
+    def array_exists(self, name: str) -> bool:
+        return os.path.exists(self._array_path(name))
+
+    def open_arrays(self, shapes: dict[str, tuple[int, ...]]
+                    ) -> dict[str, np.memmap]:
+        """Open (or create) one float32 memmap per named feature.
+
+        ``shapes`` are FULL array shapes including the n_records leading
+        dim.  Reopening an existing store validates the layout, so a
+        feature-set or parameter change on resume fails loudly instead
+        of writing through a stale layout.
+        """
         if self._arrays is not None:
+            cached = {k: tuple(a.shape) for k, a in self._arrays.items()}
+            want = {k: tuple(s) for k, s in shapes.items()}
+            if cached != want:
+                raise ValueError(
+                    f"store already opened with a different layout: "
+                    f"open {cached}, requested {want}")
             return self._arrays
+        out = {}
+        for name, shape in shapes.items():
+            path = self._array_path(name)
+            if os.path.exists(path):
+                mm = np.lib.format.open_memmap(path, mode="r+")
+                if tuple(mm.shape) != tuple(shape):
+                    raise ValueError(
+                        f"store layout mismatch for {name!r}: on disk "
+                        f"{tuple(mm.shape)}, requested {tuple(shape)} "
+                        f"(did the feature set or params change?)")
+                out[name] = mm
+            else:
+                out[name] = np.lib.format.open_memmap(
+                    path, mode="w+", dtype=np.float32, shape=tuple(shape))
+        self._arrays = out
+        return out
+
+    def arrays(self, m: DatasetManifest, p: DepamParams, with_tol: bool):
+        """Legacy layout (welch/spl[/tol]) — thin open_arrays wrapper."""
         spec = {"welch": (m.n_records, p.n_bins),
                 "spl": (m.n_records,)}
         if with_tol:
             spec["tol"] = (m.n_records, make_band_matrix(p).shape[1])
-        out = {}
-        for name, shape in spec.items():
-            path = os.path.join(self.root, f"{name}.npy")
-            if os.path.exists(path):
-                out[name] = np.lib.format.open_memmap(path, mode="r+")
-            else:
-                out[name] = np.lib.format.open_memmap(
-                    path, mode="w+", dtype=np.float32, shape=shape)
-        self._arrays = out
-        return out
+        return self.open_arrays(spec)
 
     # -- cursor -------------------------------------------------------
     def _cursor_path(self) -> str:
         return os.path.join(self.root, "cursor.json")
 
-    def commit(self, plan: ShardPlan, step: int, welch_sum: np.ndarray,
-               live: float) -> None:
+    def commit_state(self, plan: ShardPlan, step: int,
+                     agg: dict[str, np.ndarray] | None,
+                     live: float) -> None:
+        """Atomically commit progress through ``step`` (inclusive) plus
+        the epoch-aggregate partial sums for any registered feature."""
         if self._arrays:
             for a in self._arrays.values():
                 a.flush()
@@ -57,7 +94,10 @@ class FeatureStore:
                  "plan": {"start": plan.start, "stop": plan.stop,
                           "n_shards": plan.n_shards,
                           "chunk_records": plan.chunk_records},
-                 "welch_sum": welch_sum.tolist(), "live": live}
+                 "live": live}
+        if agg:
+            state["agg"] = {k: np.asarray(v).tolist()
+                            for k, v in agg.items()}
         tmp = self._cursor_path() + ".tmp"
         with open(tmp, "w") as f:
             json.dump(state, f)
@@ -65,12 +105,35 @@ class FeatureStore:
             os.fsync(f.fileno())
         os.replace(tmp, self._cursor_path())      # atomic commit
 
+    def commit(self, plan: ShardPlan, step: int, welch_sum: np.ndarray,
+               live: float) -> None:
+        """Legacy signature: the welch partial sum + live count."""
+        self.commit_state(plan, step, {"welch": welch_sum}, live)
+
     def load_cursor(self) -> dict | None:
         try:
             with open(self._cursor_path()) as f:
                 return json.load(f)
         except FileNotFoundError:
             return None
+
+    def load_agg(self) -> tuple[dict[str, np.ndarray], float] | None:
+        """Committed aggregate state as (partials, live), or None.
+
+        Understands both the generalized ``agg`` mapping and the legacy
+        flat ``welch_sum`` key from pre-registry cursors.
+        """
+        st = self.load_cursor()
+        if st is None:
+            return None
+        if "agg" in st:
+            agg = {k: np.asarray(v, np.float64)
+                   for k, v in st["agg"].items()}
+        elif "welch_sum" in st:
+            agg = {"welch": np.asarray(st["welch_sum"], np.float64)}
+        else:
+            agg = {}
+        return agg, float(st.get("live", 0.0))
 
     def committed_steps(self, plan: ShardPlan) -> int:
         """How many steps of ``plan`` are already fully committed."""

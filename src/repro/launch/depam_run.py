@@ -1,24 +1,30 @@
 """DEPAM pipeline launcher — the paper's job, end to end.
 
-Processes a (synthetic or wav-backed) PAM dataset through the distributed
-feature chain with checkpointed progress, exactly like submitting the
+Processes a (synthetic or wav-backed) PAM dataset through the declarative
+SoundscapeJob API with checkpointed progress, exactly like submitting the
 Spark job in the paper:
 
   PYTHONPATH=src python -m repro.launch.depam_run \
       --param-set 1 --files 8 --record-sec 5 --out /tmp/depam \
-      [--wav-dir /path/to/wavs] [--resume]
+      [--features welch,spl,tol,percentiles] [--wav-dir /path/to/wavs]
+
+Resume is implicit: progress is committed to ``--out`` after every step,
+so re-running the same command against an existing output directory picks
+up from the committed cursor (a "[depam] resuming at step N" notice is
+printed).  Delete the output directory to start from scratch.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
 
 import numpy as np
 
-from repro.core import pipeline
-from repro.core.manifest import DatasetManifest, plan
-from repro.core.params import PARAM_SET_1, PARAM_SET_2, DepamParams
+from repro import api
+from repro.core.manifest import DatasetManifest
+from repro.core.params import PARAM_SET_1, PARAM_SET_2
 from repro.core.store import FeatureStore
 
 
@@ -30,39 +36,50 @@ def main() -> None:
     ap.add_argument("--record-sec", type=float, default=None,
                     help="override recordSizeInSec (smoke scale)")
     ap.add_argument("--chunk-records", type=int, default=4)
+    ap.add_argument("--features", default="welch,spl,tol",
+                    help="comma-separated registered features "
+                         f"(available: {','.join(api.feature_names())})")
     ap.add_argument("--out", required=True)
     ap.add_argument("--wav-dir", default=None)
     ap.add_argument("--no-kernels", action="store_true")
     a = ap.parse_args()
 
     base = PARAM_SET_1 if a.param_set == 1 else PARAM_SET_2
-    p = base if a.record_sec is None else DepamParams(
-        nfft=base.nfft, window_size=base.window_size,
-        window_overlap=base.window_overlap, record_size_sec=a.record_sec)
+    p = base if a.record_sec is None else dataclasses.replace(
+        base, record_size_sec=a.record_sec)
     m = DatasetManifest(n_files=a.files, records_per_file=a.records_per_file,
                         record_size=p.record_size, fs=p.fs, seed=42)
+    feats = [f.strip() for f in a.features.split(",") if f.strip()]
     print(f"[depam] param set {a.param_set} (nfft={p.nfft}, "
           f"overlap={p.window_overlap}); dataset {m.n_records} records "
-          f"({m.total_gb:.3f} GB)")
-
-    reader = None
-    if a.wav_dir:
-        from repro.data.wavio import WavRecordReader
-        reader = WavRecordReader(a.wav_dir, m)
+          f"({m.total_gb:.3f} GB); features {feats}")
 
     store = FeatureStore(a.out)
+    j = (api.job(m, p).features(*feats).chunk(a.chunk_records)
+         .kernels(not a.no_kernels).to(store))
+    if a.wav_dir:
+        j = j.source(api.WavSource(a.wav_dir))
+
+    start_step = j.resume_step()
+    if start_step > 0:
+        print(f"[depam] resuming at step {start_step} "
+              f"(cursor {store.load_cursor()['cursor']})")
+
     t0 = time.time()
-    out = pipeline.run_pipeline(m, p, chunk_records=a.chunk_records,
-                                store=store, use_kernels=not a.no_kernels,
-                                reader=reader)
+    out = j.run()
     dt = time.time() - t0
     gb_min = m.total_gb / (dt / 60)
-    print(f"[depam] {out['n_records']} records in {dt:.1f}s "
-          f"({gb_min:.3f} GB/min); LTSA {out['ltsa_db'].shape}, "
-          f"mean SPL {np.mean(out['spl']):.2f} dB")
+    summary = (f"[depam] {out.n_records} records in {dt:.1f}s "
+               f"({gb_min:.3f} GB/min)")
+    if "welch" in out.features:
+        summary += f"; LTSA {out['welch'].shape}"
+    if "spl" in out.features:
+        summary += f", mean SPL {np.mean(out['spl']):.2f} dB"
+    print(summary)
     with open(f"{a.out}/summary.json", "w") as f:
-        json.dump({"records": out["n_records"], "seconds": dt,
-                   "gb": m.total_gb, "gb_per_min": gb_min}, f, indent=1)
+        json.dump({"records": out.n_records, "seconds": dt,
+                   "gb": m.total_gb, "gb_per_min": gb_min,
+                   "features": feats}, f, indent=1)
 
 
 if __name__ == "__main__":

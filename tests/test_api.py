@@ -1,0 +1,171 @@
+"""SoundscapeJob API: registry, legacy equivalence, sinks, resume."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro import api
+from repro.core import pipeline, spectra
+from repro.core.manifest import DatasetManifest
+from repro.core.params import DepamParams
+from repro.core.store import FeatureStore
+
+P = DepamParams(nfft=256, window_size=256, window_overlap=128,
+                record_size_sec=0.25)
+M = DatasetManifest(n_files=3, records_per_file=4, record_size=P.record_size,
+                    fs=P.fs, seed=11)
+ALL = ("welch", "spl", "tol", "percentiles")
+
+
+class TestRegistry:
+    def test_builtins_registered(self):
+        assert set(ALL) <= set(api.feature_names())
+
+    def test_shapes(self):
+        assert api.get_feature("welch").shape(M, P) == (P.n_bins,)
+        assert api.get_feature("spl").shape(M, P) == ()
+        assert api.get_feature("percentiles").shape(M, P) == \
+            (len(api.SPECTRUM_PERCENTILES), P.n_bins)
+
+    def test_unknown_feature_is_a_helpful_error(self):
+        with pytest.raises(KeyError, match="registered"):
+            api.get_feature("nope")
+
+    def test_register_roundtrip(self):
+        """register -> select by name -> compute -> unregister."""
+        spec = api.FeatureSpec(
+            name="rms", shape=lambda m, p: (),
+            compute=lambda ctx: jnp.sqrt(jnp.mean(ctx.records ** 2, -1)),
+            fill=0.0)
+        api.register(spec)
+        try:
+            assert "rms" in api.feature_names()
+            res = api.job(M, P).features("rms").chunk(4).run()
+            rec = np.asarray(pipeline.synth_record(jnp.int32(3), M))
+            want = np.sqrt(np.mean(rec.astype(np.float64) ** 2))
+            assert np.allclose(res["rms"][3], want, rtol=1e-4)
+        finally:
+            api.unregister("rms")
+        assert "rms" not in api.feature_names()
+
+    def test_duplicate_register_raises(self):
+        with pytest.raises(ValueError, match="already registered"):
+            api.register(api.get_feature("welch"))
+
+    def test_inline_spec_without_registration(self):
+        spec = api.FeatureSpec(
+            name="peak", shape=lambda m, p: (),
+            compute=lambda ctx: jnp.max(jnp.abs(ctx.records), -1))
+        res = api.job(M, P).features(spec).chunk(4).run()
+        assert res["peak"].shape == (M.n_records,)
+        assert (res["peak"] > 0).all()
+
+
+class TestLegacyEquivalence:
+    """The acceptance contract: the job API is byte-identical to
+    run_pipeline for the paper's welch/spl/tol workload."""
+
+    @pytest.mark.parametrize("use_kernels", [True, False])
+    def test_byte_identical_to_run_pipeline(self, use_kernels):
+        legacy = pipeline.run_pipeline(M, P, chunk_records=4,
+                                       use_kernels=use_kernels)
+        res = (api.job(M, P).features("welch", "spl", "tol").chunk(4)
+               .kernels(use_kernels).run())
+        assert np.array_equal(legacy["welch"], res["welch"])
+        assert np.array_equal(legacy["spl"], res["spl"])
+        assert np.array_equal(legacy["tol"], res["tol"])
+        assert np.array_equal(legacy["mean_welch"], res["mean_welch"])
+        assert legacy["n_records"] == res.n_records == M.n_records
+
+    def test_percentiles_matches_numpy_oracle(self):
+        res = (api.job(M, P).features("percentiles").chunk(4)
+               .kernels(False).run())
+        rec = np.asarray(pipeline.synth_record(jnp.int32(7), M))
+        fp = np.asarray(spectra.frame_psd(jnp.asarray(rec), P))
+        db = 10.0 * np.log10(np.maximum(fp, 1e-30)) + P.gain_db
+        want = np.percentile(db, api.SPECTRUM_PERCENTILES, axis=0)
+        assert np.allclose(res["percentiles"][7], want, atol=1e-3)
+        # percentile levels are monotone in the percentile
+        assert (np.diff(res["percentiles"], axis=1) >= -1e-5).all()
+
+    def test_features_share_one_welch(self):
+        """spl/tol computed from the same context equal standalone runs
+        (the single-pass composition is lossless)."""
+        combo = api.job(M, P).features(*ALL).chunk(4).run()
+        for name in ALL:
+            solo = api.job(M, P).features(name).chunk(4).run()
+            assert np.array_equal(combo[name], solo[name]), name
+
+
+class TestSinksAndSources:
+    def test_callback_sink_streams_every_record(self):
+        seen = []
+        res = (api.job(M, P).features("spl").chunk(4)
+               .to(lambda step, idx, vals: seen.append((step, idx, vals)))
+               .run())
+        assert res.features is None           # streaming sink keeps nothing
+        got = np.concatenate([idx for _, idx, _ in seen])
+        assert sorted(got.tolist()) == list(range(M.n_records))
+        mem = api.job(M, P).features("spl").chunk(4).run()
+        streamed = np.concatenate([v["spl"] for _, _, v in seen])
+        assert np.array_equal(np.sort(streamed), np.sort(mem["spl"]))
+
+    def test_wav_source_runs(self, tmp_path):
+        from repro.data.wavio import write_dataset
+        write_dataset(str(tmp_path), M)
+        res = (api.job(M, P).features("welch", "spl").chunk(4)
+               .source(str(tmp_path)).run())
+        assert res.n_records == M.n_records
+        assert np.isfinite(res["spl"]).all()
+
+    def test_reader_source_from_callable(self):
+        def reader(idx):
+            return np.ones((*idx.shape, M.record_size), np.float32)
+        res = api.job(M, P).features("spl").chunk(4).source(reader).run()
+        # constant signal -> identical SPL everywhere
+        assert np.allclose(res["spl"], res["spl"][0])
+
+
+class TestResume:
+    def test_resume_mid_job_generalized_store(self, tmp_path):
+        """Crash after 1 step with a 4-feature layout (incl. the ND
+        percentiles memmap); resume must equal one-shot bitwise."""
+        d = str(tmp_path / "s")
+        api.job(M, P).features(*ALL).chunk(4).to(d).limit(1).run()
+        cur = FeatureStore(d).load_cursor()
+        assert cur is not None and cur["cursor"] == 4
+        resumed = api.job(M, P).features(*ALL).chunk(4).to(d).run()
+        oneshot = api.job(M, P).features(*ALL).chunk(4).run()
+        for name in ALL:
+            assert np.array_equal(np.asarray(resumed[name]),
+                                  oneshot[name]), name
+        assert np.array_equal(resumed["mean_welch"], oneshot["mean_welch"])
+        assert resumed.n_records == M.n_records
+
+    def test_resume_with_added_feature_fails_loudly(self, tmp_path):
+        """A feature added after the cursor was committed has no data
+        for the skipped steps — resuming must refuse, not return the
+        fill values."""
+        d = str(tmp_path / "s")
+        api.job(M, P).features("welch").chunk(4).to(d).limit(1).run()
+        with pytest.raises(ValueError, match="cannot resume"):
+            api.job(M, P).features("welch", "spl").chunk(4).to(d).run()
+        # retrying must ALSO refuse: the failed attempt may not have
+        # created the missing memmap and defeated its own guard
+        with pytest.raises(ValueError, match="cannot resume"):
+            api.job(M, P).features("welch", "spl").chunk(4).to(d).run()
+
+    def test_reused_store_instance_validates_layout(self, tmp_path):
+        """The open_arrays cache must not serve a different layout."""
+        store = FeatureStore(str(tmp_path / "s"))
+        store.open_arrays({"welch": (4, 8)})
+        with pytest.raises(ValueError, match="different layout"):
+            store.open_arrays({"welch": (4, 8), "spl": (4,)})
+
+    def test_layout_mismatch_fails_loudly(self, tmp_path):
+        d = str(tmp_path / "s")
+        api.job(M, P).features("welch").chunk(4).to(d).limit(1).run()
+        p2 = DepamParams(nfft=128, window_size=128, window_overlap=64,
+                         record_size_sec=0.25)
+        with pytest.raises(ValueError, match="layout mismatch"):
+            api.job(M, p2).features("welch").chunk(4).to(d).run()

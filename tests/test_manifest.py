@@ -1,5 +1,9 @@
 """Manifest / shard-plan invariants (fault tolerance + elasticity)."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="optional dev dependency: pip install hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.manifest import DatasetManifest, ShardPlan, plan, replan

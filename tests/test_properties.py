@@ -1,6 +1,9 @@
 """System-invariant property tests (hypothesis where the space is big)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="optional dev dependency: pip install hypothesis")
 from hypothesis import given, settings, strategies as st
 
 import jax

@@ -2,6 +2,9 @@
 import numpy as np
 import pytest
 import scipy.signal as ss
+
+pytest.importorskip("hypothesis",
+                    reason="optional dev dependency: pip install hypothesis")
 from hypothesis import given, settings, strategies as st
 
 import jax
