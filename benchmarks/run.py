@@ -13,8 +13,8 @@ def main() -> None:
     fast = "--fast" in sys.argv
     rows = ["name,us_per_call,derived"]
 
-    from benchmarks import fig3_1_single_node, fig3_2_speedup, \
-        job_pipeline, table2_1_param_sets, roofline_report
+    from benchmarks import async_pipeline, fig3_1_single_node, \
+        fig3_2_speedup, job_pipeline, table2_1_param_sets, roofline_report
 
     rows += fig3_1_single_node.run(
         workload_records=(4, 8) if fast else (4, 8, 16))
@@ -22,6 +22,8 @@ def main() -> None:
     rows += table2_1_param_sets.run(n_records=2 if fast else 4)
     rows += job_pipeline.run(n_records=8 if fast else 16,
                              iters=2 if fast else 3)
+    rows += async_pipeline.run(n_records=16 if fast else 32,
+                               iters=1 if fast else 2)
     rows += roofline_report.run()
 
     print("\n".join(rows))

@@ -1,0 +1,61 @@
+#!/usr/bin/env python
+"""Check that relative links in the documentation resolve.
+
+Scans README.md and docs/*.md for markdown links/images and verifies
+every relative target exists in the repo (anchors and absolute URLs are
+skipped; a `path#anchor` target checks only the path). Exits non-zero
+listing the broken links, so CI fails instead of letting docs rot.
+
+    python scripts/check_docs_links.py [repo_root]
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+# [text](target) / ![alt](target), ignoring (http...) and (#anchor)
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+_SKIP = ("http://", "https://", "mailto:", "#")
+
+
+def doc_files(root: str) -> list[str]:
+    return [p for p in [os.path.join(root, "README.md"),
+                        *sorted(glob.glob(os.path.join(root, "docs", "*.md")))]
+            if os.path.exists(p)]
+
+
+def broken_links(root: str) -> list[tuple[str, str]]:
+    bad = []
+    for doc in doc_files(root):
+        with open(doc) as f:
+            text = f.read()
+        for target in _LINK.findall(text):
+            if target.startswith(_SKIP):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = os.path.normpath(
+                os.path.join(os.path.dirname(doc), path))
+            if not os.path.exists(resolved):
+                bad.append((os.path.relpath(doc, root), target))
+    return bad
+
+
+def main() -> int:
+    root = sys.argv[1] if len(sys.argv) > 1 else "."
+    docs = doc_files(root)
+    if not docs:
+        print("no documentation files found", file=sys.stderr)
+        return 1
+    bad = broken_links(root)
+    for doc, target in bad:
+        print(f"BROKEN {doc}: ({target})", file=sys.stderr)
+    print(f"checked {len(docs)} files, {len(bad)} broken links")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

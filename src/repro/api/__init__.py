@@ -15,6 +15,12 @@ API compose freely:
     resumable feature store (:class:`StoreSink`), or a streaming callback
     (:class:`CallbackSink`).
 
+Execution is synchronous by default; ``.async_io(depth=2)`` switches to
+the pipelined executor — host reads prefetched through the speculative
+loader (:class:`PrefetchSource`), the epoch aggregate carried on-device,
+up to ``inflight`` device steps dispatched ahead, and sink IO on an
+:class:`AsyncSink` background writer — with bitwise-identical results.
+
 The fluent builder ties them together::
 
     from repro import api
@@ -30,18 +36,24 @@ Adding a workload is a registry call — no engine, store, or CLI edits::
 
     api.register(api.FeatureSpec(name="band_energy", ...))
 """
+from .engine import ExecOptions
 from .features import (FeatureContext, FeatureSpec, EpochAggregate,
                        SPECTRUM_PERCENTILES, feature_names, get_feature,
                        register, resolve_features, unregister)
-from .sources import ReaderSource, Source, SynthSource, WavSource, as_source
-from .sinks import CallbackSink, MemorySink, Sink, StoreSink, as_sink
+from .sources import (PrefetchSource, ReaderSource, Source, SynthSource,
+                      WavSource, as_source)
+from .sinks import (AsyncSink, CallbackSink, MemorySink, Sink, StoreSink,
+                    as_sink)
 from .job import JobResult, SoundscapeJob, job
 
 __all__ = [
+    "ExecOptions",
     "FeatureContext", "FeatureSpec", "EpochAggregate",
     "SPECTRUM_PERCENTILES", "feature_names", "get_feature", "register",
     "resolve_features", "unregister",
-    "Source", "SynthSource", "ReaderSource", "WavSource", "as_source",
-    "Sink", "MemorySink", "StoreSink", "CallbackSink", "as_sink",
+    "Source", "SynthSource", "ReaderSource", "WavSource", "PrefetchSource",
+    "as_source",
+    "Sink", "MemorySink", "StoreSink", "CallbackSink", "AsyncSink",
+    "as_sink",
     "SoundscapeJob", "JobResult", "job",
 ]

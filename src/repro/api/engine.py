@@ -9,14 +9,39 @@ Execution model (unchanged from the paper, Fig 2.1):
   * the only collective is the epoch aggregate (a psum of the partials
     declared by feature specs — the paper's final timestamp join).
 
-What the API redesign changes is *what runs inside the step*: instead of
-a hard-coded welch/spl/tol triple, the engine traces every selected
-:class:`FeatureSpec` against one shared :class:`FeatureContext`, so all
-features — built-in or user-registered — fuse into a single program and
+What the API redesign changed is *what runs inside the step*: every
+selected :class:`FeatureSpec` traces against one shared
+:class:`FeatureContext`, so all features fuse into a single program and
 a single pass over the data.
+
+What the pipelined executor changes is *when things happen around the
+step*.  The driver loop is a software pipeline over three resources —
+host readers, devices, and the sink writer — instead of a serial chain:
+
+  * the epoch-aggregate accumulator lives ON-DEVICE as a jitted carry
+    (``compile_agg_update``), so no step blocks on a device→host sync;
+    the accumulator is materialized once at job end, plus at the commit
+    boundaries of sinks that persist it (async copies, off the critical
+    path);
+  * up to ``ExecOptions.inflight`` steps stay in flight: step k+1 is
+    dispatched while step k's outputs transfer to the host via
+    ``copy_to_host_async`` and drain into the sink;
+  * host-fed payloads arrive through ``Source.stream`` — which a
+    :class:`~repro.api.sources.PrefetchSource` overlaps with compute via
+    the SpeculativeLoader thread pool — and their device buffers are
+    DONATED to the step so XLA can reuse/free them immediately;
+  * an :class:`~repro.api.sinks.AsyncSink` (applied by the job builder)
+    moves sink IO onto a background writer with the same ordering.
+
+``ExecOptions()`` (the default) degenerates to the fully synchronous
+loop.  Pipelining only reorders host-side waiting — the jitted programs
+and their invocation order are identical — so sync and async results
+are bitwise-equal (tests/test_async.py holds this line).
 """
 from __future__ import annotations
 
+import collections
+import dataclasses
 import functools
 from typing import Callable
 
@@ -31,18 +56,52 @@ from .features import FeatureContext, FeatureSpec
 from .sinks import Sink
 from .sources import Source, synth_record
 
+# NOTE on payload donation: when no output can alias the donated
+# waveform buffer, jax warns "Some donated buffers were not usable".
+# The free still happens, so for this engine the message is noise — but
+# suppressing it here would mutate process-global warning state for
+# every importer, so the library leaves it alone (it prints at most
+# once per process).  Applications that want silence filter it at their
+# own entry point (launch/depam_run.py does; pyproject.toml covers the
+# test suite).
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecOptions:
+    """Executor knobs; the default is the fully synchronous loop.
+
+    ``inflight`` — device steps allowed in flight before the driver
+    drains the oldest into the sink (0 = drain immediately, i.e. sync).
+    ``prefetch_depth`` — plan steps of host read-ahead; the job builder
+    wraps host-fed sources in a ``PrefetchSource`` of this depth (0 =
+    fetch inline).  ``queue_size`` — AsyncSink backpressure bound, in
+    steps.  ``donate`` — donate payload buffers and (when no sink needs
+    per-step aggregate state) the on-device accumulator carry.
+    """
+
+    inflight: int = 0
+    prefetch_depth: int = 0
+    queue_size: int = 8
+    donate: bool = True
+
+    def __post_init__(self):
+        if self.inflight < 0 or self.prefetch_depth < 0 \
+                or self.queue_size < 1:
+            raise ValueError(f"invalid ExecOptions: {self}")
+
 
 @functools.lru_cache(maxsize=64)
 def compile_step(specs: tuple[FeatureSpec, ...], m: DatasetManifest,
                  p: DepamParams, mesh: Mesh | None,
                  data_axes: tuple[str, ...], use_kernels: bool,
-                 device_synth: bool) -> Callable:
+                 device_synth: bool, donate: bool = False) -> Callable:
     """Build the single jitted per-chunk step for all selected features.
 
     Takes (payload, mask) where payload is int32 indices (device synth)
     or float32 waveforms (host-fed), both with (n_shards, chunk) leading
     layout; returns {feature: (n_shards, chunk, *shape)} with padding
-    slots overwritten by each spec's fill value.
+    slots overwritten by each spec's fill value.  ``donate`` hands the
+    payload buffer to XLA (host-fed waveforms are the big one).
 
     Cached on the full configuration (specs are frozen dataclasses), so
     repeated jobs with the same setup reuse one compiled program instead
@@ -70,82 +129,113 @@ def compile_step(specs: tuple[FeatureSpec, ...], m: DatasetManifest,
                                     jnp.asarray(s.fill, val.dtype))
         return out
 
+    kw = {"donate_argnums": (0,)} if donate else {}
     if mesh is None:
-        return jax.jit(local_step)
+        return jax.jit(local_step, **kw)
 
     shard = NamedSharding(mesh, P(data_axes))
     return jax.jit(local_step, in_shardings=(shard, shard),
-                   out_shardings=shard)
+                   out_shardings=shard, **kw)
 
 
 @functools.lru_cache(maxsize=64)
-def compile_aggregate(specs: tuple[FeatureSpec, ...], mesh: Mesh | None,
-                      data_axes: tuple[str, ...]) -> Callable:
-    """Epoch aggregate: per-spec partials + live count, one collective.
+def compile_agg_update(specs: tuple[FeatureSpec, ...], mesh: Mesh | None,
+                       data_axes: tuple[str, ...],
+                       donate: bool = False) -> Callable:
+    """Epoch-aggregate carry update: state' = state + step partials.
 
-    Takes (outputs, mask) and returns {feature: partial, "__live__": n};
+    Takes (state, outputs, mask) and returns the new state, where state
+    is {feature: running sum, "__c:"+feature: Kahan compensation,
+    "__live__": record count} living ON-DEVICE across the whole job;
     under a mesh the replicated out_sharding makes XLA insert the psum.
+    The compensated sum keeps float32 accumulation error O(eps)
+    regardless of step count (the host-side float64 loop this replaces
+    got the same property from width; XLA does not reassociate floats,
+    so the compensation survives compilation).  ``donate`` recycles the
+    old state's buffers — only safe when no per-step reference to the
+    carry is kept (i.e. no sink consumes commit state).
     """
     agg_specs = [s for s in specs if s.aggregate is not None]
 
-    def local(out, mask):
-        partials = {s.name: s.aggregate.local(out[s.name], mask)
-                    for s in agg_specs}
-        partials["__live__"] = jnp.sum(mask.astype(jnp.float32))
-        return partials
+    def update(state, out, mask):
+        new = {}
+        for s in agg_specs:
+            part = s.aggregate.local(out[s.name], mask)
+            y = part - state["__c:" + s.name]
+            t = state[s.name] + y
+            new["__c:" + s.name] = (t - state[s.name]) - y
+            new[s.name] = t
+        new["__live__"] = state["__live__"] \
+            + jnp.sum(mask.astype(jnp.int32))
+        return new
 
+    kw = {"donate_argnums": (0,)} if donate else {}
     if mesh is None:
-        return jax.jit(local)
+        return jax.jit(update, **kw)
 
     shard = NamedSharding(mesh, P(data_axes))
     rep = NamedSharding(mesh, P())
-    return jax.jit(local, in_shardings=(shard, shard), out_shardings=rep)
+    return jax.jit(update, in_shardings=(rep, shard, shard),
+                   out_shardings=rep, **kw)
+
+
+def _init_agg_state(specs, m, p, shapes, resumed):
+    """Device-resident accumulator, seeded from committed state.
+
+    Each aggregate carries a Kahan compensation term under the
+    engine-internal key ``"__c:" + name`` (the ``__`` prefix marks keys
+    sinks must persist opaquely); both halves ride through commit/resume
+    so a resumed accumulation is bitwise-identical to an uninterrupted
+    one (pre-compensation cursors simply resume with zero compensation).
+    """
+    agg_specs = [s for s in specs if s.aggregate is not None]
+    state = {}
+    for s in agg_specs:
+        shape = s.aggregate.partial_shape(m, p) \
+            if s.aggregate.partial_shape else shapes[s.name]
+        state[s.name] = jnp.zeros(shape, jnp.float32)
+        state["__c:" + s.name] = jnp.zeros(shape, jnp.float32)
+    state["__live__"] = jnp.zeros((), jnp.int32)
+    if resumed is not None:
+        prev_agg, prev_live = resumed
+        state["__live__"] = jnp.asarray(int(prev_live), jnp.int32)
+        for name, total in prev_agg.items():
+            if name in state:
+                state[name] = jnp.asarray(total, jnp.float32)
+    return state
 
 
 def run_job(m: DatasetManifest, p: DepamParams, specs: list[FeatureSpec],
             source: Source, sink: Sink, mesh: Mesh | None,
             data_axes: tuple[str, ...], pl_: ShardPlan,
-            use_kernels: bool, max_steps: int | None):
+            use_kernels: bool, max_steps: int | None,
+            options: ExecOptions | None = None):
     """Drive the job over plan ``pl_``; resumable when the sink is.
     Returns (features, epoch, n_records, plan) — see job.JobResult."""
+    options = options or ExecOptions()
     source = source.bind(m, p)
     shapes = {s.name: tuple(s.shape(m, p)) for s in specs}
 
+    donate_payload = options.donate and not source.device_synth
+    donate_carry = options.donate and not sink.wants_commit
     step_fn = compile_step(tuple(specs), m, p, mesh, data_axes,
-                           use_kernels, source.device_synth)
-    agg_fn = compile_aggregate(tuple(specs), mesh, data_axes)
+                           use_kernels, source.device_synth,
+                           donate_payload)
+    agg_fn = compile_agg_update(tuple(specs), mesh, data_axes,
+                                donate_carry)
 
     sink.open(m, p, shapes, pl_)
-    agg_specs = [s for s in specs if s.aggregate is not None]
-    agg_state = {
-        s.name: np.zeros(s.aggregate.partial_shape(m, p)
-                         if s.aggregate.partial_shape else shapes[s.name],
-                         np.float64)
-        for s in agg_specs}
-    live = 0.0
     start_step, resumed = sink.resume_state()
-    if resumed is not None:
-        prev_agg, prev_live = resumed
-        live = prev_live
-        for name, total in prev_agg.items():
-            if name in agg_state:
-                agg_state[name] = np.asarray(total, np.float64)
+    agg_state = _init_agg_state(specs, m, p, shapes, resumed)
 
     n_steps = pl_.n_steps if max_steps is None \
         else min(pl_.n_steps, max_steps)
-    for step in range(start_step, n_steps):
-        idx = pl_.step_indices(step)
-        mask = pl_.step_mask(step)
-        if source.device_synth:
-            payload = jnp.asarray(idx, jnp.int32)
-        else:
-            payload = jnp.asarray(source.fetch(idx), jnp.float32)
-        out = step_fn(payload, jnp.asarray(mask))
-        partials = agg_fn(out, jnp.asarray(mask))
-        live += float(partials.pop("__live__"))
-        for name, part in partials.items():
-            agg_state[name] += np.asarray(part, np.float64)
 
+    inflight: collections.deque = collections.deque()
+
+    def drain_one():
+        """Materialize the oldest in-flight step into the sink."""
+        step, idx, mask, out, commit_state = inflight.popleft()
         flat_idx = idx.reshape(-1)
         keep = mask.reshape(-1)
         sel = flat_idx[keep]
@@ -154,9 +244,50 @@ def run_job(m: DatasetManifest, p: DepamParams, specs: list[FeatureSpec],
                 (-1,) + shapes[name])[keep]
             for name in shapes}
         sink.write(step, sel, values)
-        sink.commit(pl_, step, agg_state, live)
+        if commit_state is not None:
+            agg_host = {k: np.asarray(v, np.float64)
+                        for k, v in commit_state.items()
+                        if k != "__live__"}
+            sink.commit(pl_, step, agg_host,
+                        float(commit_state["__live__"]))
 
-    epoch = {s.aggregate.out_name: s.aggregate.finalize(agg_state[s.name],
-                                                        live)
-             for s in agg_specs}
-    return sink.result(), epoch, int(live), pl_
+    stream = None if source.device_synth \
+        else source.stream(pl_, start_step, n_steps)
+    try:
+        for step in range(start_step, n_steps):
+            idx = pl_.step_indices(step)
+            mask = pl_.step_mask(step)
+            if source.device_synth:
+                payload = jnp.asarray(idx, jnp.int32)
+            else:
+                payload = jnp.asarray(next(stream), jnp.float32)
+            dmask = jnp.asarray(mask)
+            out = step_fn(payload, dmask)
+            agg_state = agg_fn(agg_state, out, dmask)
+            # start the device→host transfers now; block in drain_one
+            for v in out.values():
+                v.copy_to_host_async()
+            commit_state = agg_state if sink.wants_commit else None
+            if commit_state is not None:
+                for v in commit_state.values():
+                    v.copy_to_host_async()
+            inflight.append((step, idx, mask, out, commit_state))
+            while len(inflight) > options.inflight:
+                drain_one()
+        while inflight:
+            drain_one()
+    finally:
+        if stream is not None:
+            stream.close()
+        sink.close()
+
+    live = int(agg_state.pop("__live__"))    # the one job-end transfer
+    epoch = {}
+    for s in specs:
+        if s.aggregate is None:
+            continue
+        # best estimate: sum minus the residual the compensation holds
+        total = np.asarray(agg_state[s.name], np.float64) \
+            - np.asarray(agg_state["__c:" + s.name], np.float64)
+        epoch[s.aggregate.out_name] = s.aggregate.finalize(total, live)
+    return sink.result(), epoch, live, pl_

@@ -10,6 +10,7 @@
                  .source("/wavs")     # optional: default device synthesis
                  .to("/tmp/depam")    # optional: default in-memory
                  .chunk(8)
+                 .async_io(depth=2)   # optional: pipelined executor
                  .run())
 
 Every setter returns the job, so configurations read as one expression;
@@ -27,8 +28,8 @@ from repro.core.manifest import DatasetManifest, ShardPlan, plan
 from repro.core.params import DepamParams
 from . import engine
 from .features import FeatureSpec, resolve_features
-from .sinks import Sink, as_sink
-from .sources import Source, as_source
+from .sinks import AsyncSink, Sink, as_sink
+from .sources import PrefetchSource, Source, as_source
 
 
 @dataclasses.dataclass
@@ -69,6 +70,7 @@ class SoundscapeJob:
         self._chunk = 8
         self._use_kernels = True
         self._max_steps: int | None = None
+        self._exec = engine.ExecOptions()
 
     def features(self, *feats: str | FeatureSpec) -> "SoundscapeJob":
         """Select registered feature names and/or inline FeatureSpecs."""
@@ -111,6 +113,28 @@ class SoundscapeJob:
         self._max_steps = max_steps
         return self
 
+    def async_io(self, depth: int = 2, inflight: int = 2,
+                 queue_size: int = 8) -> "SoundscapeJob":
+        """Enable the pipelined executor: overlap host IO, device
+        compute, and sink IO.
+
+        ``depth`` plan steps of host read-ahead (host-fed sources are
+        wrapped in a :class:`PrefetchSource` driving the
+        SpeculativeLoader), ``inflight`` device steps dispatched ahead
+        of the sink drain, and sink writes/commits moved onto an
+        :class:`AsyncSink` background writer bounded at ``queue_size``
+        steps.  Results are bitwise-identical to the synchronous path —
+        pipelining reorders waiting, not computation.
+        """
+        self._exec = engine.ExecOptions(
+            inflight=inflight, prefetch_depth=depth, queue_size=queue_size)
+        return self
+
+    def sync_io(self) -> "SoundscapeJob":
+        """Back to the fully synchronous executor (the default)."""
+        self._exec = engine.ExecOptions()
+        return self
+
     def _plan(self) -> ShardPlan:
         n_shards = 1
         if self._mesh is not None:
@@ -126,11 +150,16 @@ class SoundscapeJob:
     def run(self) -> JobResult:
         specs = resolve_features(self._features)
         source: Source = as_source(self._source)
+        if self._exec.prefetch_depth > 0 and not source.device_synth \
+                and not isinstance(source, PrefetchSource):
+            source = PrefetchSource(source, depth=self._exec.prefetch_depth)
         sink: Sink = as_sink(self._sink)
+        if self._exec.inflight > 0 and not isinstance(sink, AsyncSink):
+            sink = AsyncSink(sink, queue_size=self._exec.queue_size)
         features, epoch, n_records, pl_ = engine.run_job(
             self._m, self._p, specs, source, sink, self._mesh,
             self._data_axes, self._plan(), self._use_kernels,
-            self._max_steps)
+            self._max_steps, self._exec)
         return JobResult(features=features, epoch=epoch,
                          n_records=n_records, plan=pl_)
 

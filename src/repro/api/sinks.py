@@ -8,7 +8,18 @@ The engine hands every sink the same three things:
     one step: ``indices`` are global record ids, ``values`` maps feature
     name to ``(len(indices), *shape)`` arrays;
   * ``commit(plan, step, agg, live)`` — called after each step with the
-    accumulated epoch-aggregate state (fault-tolerance hook).
+    accumulated epoch-aggregate state (fault-tolerance hook).  ``agg``
+    maps feature name -> partial sum, PLUS engine-internal entries whose
+    keys start with ``__`` (e.g. ``__c:welch``, the Kahan compensation
+    that makes resumed accumulation bitwise-exact); sinks must persist
+    the mapping opaquely and never interpret the ``__``-prefixed keys.
+
+The lifecycle contract (see ``docs/api.md``) is strict: ``open`` before
+anything else, ``write(step=k)`` before ``commit(step=k)``, steps in
+ascending order, and a commit makes *all* prior writes durable.
+:class:`AsyncSink` moves ``write``/``commit`` onto a bounded background
+writer thread while preserving exactly that ordering, so the driver can
+dispatch the next device step instead of blocking on sink IO.
 
 ``as_sink`` normalizes what users pass to ``SoundscapeJob.to()``: ``None``
 -> in-memory arrays, a path string or ``FeatureStore`` -> the resumable
@@ -16,6 +27,8 @@ store, a callable -> streaming callback, a ``Sink`` -> itself.
 """
 from __future__ import annotations
 
+import queue
+import threading
 from typing import Callable
 
 import numpy as np
@@ -27,6 +40,11 @@ from repro.core.store import FeatureStore
 
 class Sink:
     resumable: bool = False
+    # Whether commit() needs the accumulated epoch-aggregate state.  The
+    # engine keeps the accumulator on-device and only materializes it to
+    # the host at commit boundaries of sinks that declare they want it;
+    # known no-op committers (memory/callback) opt out below.
+    wants_commit: bool = True
 
     def open(self, m: DatasetManifest, p: DepamParams,
              shapes: dict[str, tuple[int, ...]], plan: ShardPlan) -> None:
@@ -53,9 +71,16 @@ class Sink:
         """Feature arrays keyed by name, or None for streaming sinks."""
         return None
 
+    def close(self) -> None:
+        """Flush and release resources; called by the engine when the
+        job finishes (or dies).  Must be safe to call more than once."""
+        pass
+
 
 class MemorySink(Sink):
     """Plain numpy arrays, one (n_records, *shape) per feature."""
+
+    wants_commit = False
 
     def __init__(self):
         self.arrays: dict[str, np.ndarray] | None = None
@@ -131,11 +156,143 @@ class CallbackSink(Sink):
     """Streaming sink: ``fn(step, indices, values)`` per step, nothing
     retained — the shape for live dashboards / downstream queues."""
 
+    wants_commit = False
+
     def __init__(self, fn: Callable[[int, np.ndarray, dict], None]):
         self.fn = fn
 
     def write(self, step, indices, values):
         self.fn(step, indices, values)
+
+
+class AsyncSink(Sink):
+    """Bounded background writer around any sink.
+
+    ``write``/``commit`` enqueue onto a FIFO processed by one worker
+    thread, so the driver returns immediately instead of blocking on
+    sink IO; the bounded queue (``queue_size`` steps) provides
+    backpressure when the sink cannot keep up.  Because the queue is
+    strictly FIFO and single-consumer, the inner sink observes exactly
+    the ordering the engine produced — every ``write(step=k)`` lands
+    before ``commit(step=k)``, and a commit is only executed (hence only
+    durable) after ALL prior writes landed.  A crash therefore leaves
+    the resumable store's cursor at a step whose data is fully on disk:
+    the same crash semantics as the synchronous path, shifted in time.
+
+    Worker exceptions are captured and re-raised on the *next* driver
+    call (``write``/``commit``/``flush``/``result``/``close``), so sink
+    failures still abort the job instead of vanishing on a thread.
+
+    ``open``/``resume_state``/``committed_steps`` stay synchronous —
+    resume decisions need the inner sink's durable state, not the
+    queue's view of it.
+    """
+
+    def __init__(self, inner: Sink, queue_size: int = 8):
+        self.inner = inner
+        self.resumable = inner.resumable
+        self.wants_commit = inner.wants_commit
+        # bound by STEPS as documented: a step enqueues a write plus,
+        # for commit-consuming sinks, a commit
+        items_per_step = 2 if self.wants_commit else 1
+        self._q: queue.Queue = queue.Queue(
+            maxsize=max(1, queue_size) * items_per_step)
+        self._worker: threading.Thread | None = None
+        self._error: BaseException | None = None
+        self._killed = False
+
+    # -- worker ---------------------------------------------------------
+    def _run(self):
+        while True:
+            item = self._q.get()
+            try:
+                if item is None:
+                    return
+                if self._killed or self._error is not None:
+                    continue          # drain without executing
+                op, args = item
+                try:
+                    if op == "write":
+                        self.inner.write(*args)
+                    else:
+                        self.inner.commit(*args)
+                except BaseException as e:     # noqa: BLE001
+                    self._error = e
+            finally:
+                self._q.task_done()
+
+    def _ensure_worker(self):
+        if self._worker is None or not self._worker.is_alive():
+            self._worker = threading.Thread(
+                target=self._run, name="AsyncSink-writer", daemon=True)
+            self._worker.start()
+
+    def _raise_pending(self):
+        # The error is STICKY: once the inner sink failed, every later
+        # driver call re-raises and the worker keeps draining without
+        # executing.  Clearing it would re-arm the worker during
+        # close()/flush() and let a commit queued behind the failed
+        # write reach the store — advancing the durable cursor past
+        # data that never landed.
+        if self._error is not None:
+            raise RuntimeError("AsyncSink worker failed") from self._error
+
+    # -- synchronous control plane --------------------------------------
+    def open(self, m, p, shapes, plan):
+        self.inner.open(m, p, shapes, plan)
+        self._killed = False
+        self._error = None        # a fresh run starts with a clean slate
+        self._ensure_worker()
+
+    def resume_state(self):
+        return self.inner.resume_state()
+
+    def committed_steps(self, plan) -> int:
+        self.flush()
+        return self.inner.committed_steps(plan)
+
+    # -- queued data plane ----------------------------------------------
+    def write(self, step, indices, values):
+        self._raise_pending()
+        self._q.put(("write", (step, indices, values)))
+
+    def commit(self, plan, step, agg, live):
+        self._raise_pending()
+        self._q.put(("commit", (plan, step, agg, live)))
+
+    def flush(self):
+        """Block until every queued write/commit has been applied."""
+        if self._worker is not None:
+            self._q.join()
+        self._raise_pending()
+
+    def result(self):
+        self.flush()
+        return self.inner.result()
+
+    def close(self):
+        """Drain the queue, stop the worker, close the inner sink."""
+        try:
+            self.flush()
+        finally:
+            if self._worker is not None and self._worker.is_alive():
+                self._q.put(None)
+                self._worker.join()
+            self._worker = None
+            self.inner.close()
+
+    def _abort(self):
+        """Crash simulation (tests): stop the worker WITHOUT draining.
+
+        Queued-but-unprocessed writes/commits are discarded, which is
+        what a process kill does to them — the durable state is whatever
+        the worker had already applied.
+        """
+        self._killed = True
+        if self._worker is not None and self._worker.is_alive():
+            self._q.put(None)
+            self._worker.join()
+        self._worker = None
 
 
 def as_sink(sink) -> Sink:

@@ -10,19 +10,27 @@ Two execution modes, unified behind one interface:
     ``(n_shards, chunk, record_size)`` waveforms on the host (wav files,
     object stores, live hydrophone callbacks) and ships them to devices.
 
+Host-fed sources additionally expose ``stream(plan, start, stop)`` — the
+per-step payload iterator the engine actually drives.  The default
+implementation fetches inline (the synchronous path);
+:class:`PrefetchSource` overrides it to run the wrapped source through
+:class:`repro.data.loader.SpeculativeLoader`, so reads for step k+depth
+proceed on a host thread pool (with over-decomposition and speculative
+re-execution of stragglers) while the devices compute step k.
+
 ``as_source`` normalizes what users pass to ``SoundscapeJob.source()``:
 ``None`` -> synthesis, a callable -> ``ReaderSource``, a path string ->
 ``WavSource``, a ``Source`` -> itself.
 """
 from __future__ import annotations
 
-from typing import Callable
+from typing import Callable, Iterator
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.manifest import DatasetManifest
+from repro.core.manifest import DatasetManifest, ShardPlan
 from repro.core.params import DepamParams
 
 
@@ -58,9 +66,29 @@ class Source:
         return self
 
     def fetch(self, indices: np.ndarray) -> np.ndarray:
-        """(n_shards, chunk) global indices -> (n_shards, chunk,
-        record_size) float32 waveforms (zeros for padding slots)."""
+        """Global record indices -> float32 waveforms of shape
+        ``indices.shape + (record_size,)`` (zeros for padding slots).
+
+        The synchronous engine passes ``(n_shards, chunk)`` arrays, but
+        implementations must NOT rely on that: the pipelined path
+        (``PrefetchSource``) over-decomposes each step and calls
+        ``fetch`` with flat 1-D sub-slices, concurrently from a thread
+        pool.  Treat ``indices`` as an arbitrary-shaped batch of
+        independent records — pure per index and thread-safe (the
+        lineage property that also makes speculative duplicate reads
+        and crash recomputation sound)."""
         raise NotImplementedError
+
+    def stream(self, plan: ShardPlan, start: int,
+               stop: int) -> Iterator[np.ndarray]:
+        """Yield one payload per plan step in [start, stop), in order.
+
+        The engine always consumes host-fed sources through this
+        iterator; the base implementation is the synchronous path
+        (fetch each step inline when the driver asks for it).
+        """
+        for step in range(start, stop):
+            yield self.fetch(plan.step_indices(step))
 
 
 class SynthSource(Source):
@@ -71,7 +99,9 @@ class SynthSource(Source):
 
 class ReaderSource(Source):
     """Any host callback ``indices -> waveforms`` (e.g. WavRecordReader,
-    a SpeculativeLoader-backed reader, or a live-stream shim)."""
+    a SpeculativeLoader-backed reader, or a live-stream shim).  The
+    callback inherits :meth:`Source.fetch`'s contract: any index shape,
+    pure per record, thread-safe under ``async_io``."""
 
     def __init__(self, reader: Callable[[np.ndarray], np.ndarray]):
         self.reader = reader
@@ -95,6 +125,62 @@ class WavSource(Source):
     def fetch(self, indices: np.ndarray) -> np.ndarray:
         assert self._reader is not None, "WavSource used before bind()"
         return np.asarray(self._reader(indices), np.float32)
+
+
+class PrefetchSource(Source):
+    """Drive any host-fed source through a :class:`SpeculativeLoader`.
+
+    Wraps ``inner`` so that ``stream`` keeps ``depth`` plan steps of
+    reads in flight on a host thread pool, each step over-decomposed
+    into ``overdecompose`` read tasks with speculative re-execution of
+    stragglers (first completion wins).  Because reads are pure
+    functions of the record index (the lineage property), the streamed
+    payloads are bitwise-identical to ``inner.fetch`` — prefetching
+    changes *when* bytes arrive, never *what* arrives.
+
+    ``SoundscapeJob.async_io(depth=...)`` applies this wrapper
+    automatically; wrap explicitly to tune workers/over-decomposition
+    or to reuse one wrapped source across jobs.
+    """
+
+    def __init__(self, inner: "Source | Callable | str", depth: int = 2,
+                 workers: int = 4, overdecompose: int = 4,
+                 speculate_factor: float = 4.0,
+                 min_speculate_sec: float = 0.05):
+        inner = as_source(inner)
+        if inner.device_synth:
+            raise ValueError(
+                "PrefetchSource wraps host-fed sources; device-"
+                "synthesized sources have no host IO to prefetch")
+        self.inner = inner
+        self.depth = max(1, depth)
+        self.workers = workers
+        self.overdecompose = overdecompose
+        self.speculate_factor = speculate_factor
+        self.min_speculate_sec = min_speculate_sec
+        self.last_stats: dict | None = None
+
+    def bind(self, m: DatasetManifest, p: DepamParams) -> "PrefetchSource":
+        self.inner = self.inner.bind(m, p)
+        return self
+
+    def fetch(self, indices: np.ndarray) -> np.ndarray:
+        return self.inner.fetch(indices)
+
+    def stream(self, plan: ShardPlan, start: int,
+               stop: int) -> Iterator[np.ndarray]:
+        from repro.data.loader import SpeculativeLoader
+        loader = SpeculativeLoader(
+            self.inner.fetch, plan, workers=self.workers,
+            overdecompose=self.overdecompose, depth=self.depth,
+            speculate_factor=self.speculate_factor,
+            min_speculate_sec=self.min_speculate_sec)
+        try:
+            for _step, payload, _mask in loader.iter_steps(start, stop):
+                yield payload
+        finally:
+            self.last_stats = loader.stats()
+            loader.close()
 
 
 def as_source(src) -> Source:

@@ -82,7 +82,9 @@ class SpeculativeLoader:
                     continue
                 try:
                     results[i] = fut.result(timeout=budget)
-                except TimeoutError:
+                # cf.TimeoutError is NOT the builtin TimeoutError until
+                # Python 3.11; catch both spellings.
+                except (cf.TimeoutError, TimeoutError):
                     # straggler: launch a duplicate, first one wins
                     with self._lock:
                         self.speculated += 1
@@ -94,18 +96,29 @@ class SpeculativeLoader:
         out = np.concatenate([results[i] for i in range(len(parts))], axis=0)
         return out.reshape(*idx.shape, -1), self.plan.step_mask(step)
 
-    def __iter__(self):
-        """Yield (step, payload, mask) with ``depth`` steps of prefetch."""
+    def iter_steps(self, start: int = 0, stop: int | None = None):
+        """Yield (step, payload, mask) for plan steps [start, stop) in
+        order, keeping ``depth`` steps in flight.
+
+        The window form is what lets a resumed job prefetch from its
+        committed cursor instead of step 0.  Closing the generator early
+        leaves submitted futures behind; ``close()`` cancels them.
+        """
+        n = self.plan.n_steps if stop is None else min(stop,
+                                                       self.plan.n_steps)
         pending: dict[int, cf.Future] = {}
-        n = self.plan.n_steps
-        for step in range(min(self.depth, n)):
+        for step in range(start, min(start + self.depth, n)):
             pending[step] = self.step_pool.submit(self._load_step, step)
-        for step in range(n):
+        for step in range(start, n):
             payload, mask = pending.pop(step).result()
             nxt = step + self.depth
             if nxt < n:
                 pending[nxt] = self.step_pool.submit(self._load_step, nxt)
             yield step, payload, mask
+
+    def __iter__(self):
+        """Yield (step, payload, mask) with ``depth`` steps of prefetch."""
+        return self.iter_steps()
 
     def stats(self) -> dict:
         with self._lock:

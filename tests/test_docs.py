@@ -1,0 +1,43 @@
+"""Documentation guards: links resolve, commands quoted in docs exist."""
+import os
+import subprocess
+import sys
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def test_docs_exist():
+    for p in ("README.md", "docs/api.md", "docs/architecture.md"):
+        assert os.path.exists(os.path.join(ROOT, p)), p
+
+
+def test_relative_links_resolve():
+    sys.path.insert(0, os.path.join(ROOT, "scripts"))
+    try:
+        from check_docs_links import broken_links, doc_files
+    finally:
+        sys.path.pop(0)
+    assert len(doc_files(ROOT)) >= 3
+    assert broken_links(ROOT) == []
+
+
+def test_link_checker_flags_breakage(tmp_path):
+    (tmp_path / "README.md").write_text(
+        "[ok](README.md) [gone](docs/missing.md) [web](https://x.y)")
+    sys.path.insert(0, os.path.join(ROOT, "scripts"))
+    try:
+        from check_docs_links import broken_links
+    finally:
+        sys.path.pop(0)
+    assert broken_links(str(tmp_path)) == [("README.md", "docs/missing.md")]
+
+
+def test_checker_cli_exit_codes(tmp_path):
+    script = os.path.join(ROOT, "scripts", "check_docs_links.py")
+    ok = subprocess.run([sys.executable, script, ROOT],
+                        capture_output=True, text=True)
+    assert ok.returncode == 0, ok.stderr
+    (tmp_path / "README.md").write_text("[gone](nope.md)")
+    bad = subprocess.run([sys.executable, script, str(tmp_path)],
+                         capture_output=True, text=True)
+    assert bad.returncode == 1 and "nope.md" in bad.stderr

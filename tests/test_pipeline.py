@@ -1,6 +1,7 @@
 """End-to-end DEPAM pipeline: oracle equivalence, resume, loader."""
 import os
 import tempfile
+import threading
 import time
 
 import numpy as np
@@ -104,6 +105,67 @@ class TestSpeculativeLoader:
             want = pl_.step_indices(step).astype(np.float32)[..., None]
             assert np.allclose(payload, np.tile(want, (1, 1, 8)))
         ld.close()
+
+    def test_prefetch_depth_honored(self):
+        """Before the first step is even consumed, reads for the next
+        ``depth`` steps are in flight — and no further."""
+        m = DatasetManifest(8, 2, 16, 100.0)
+        pl_ = plan(m, 1, 2)                   # 8 steps of 2 records
+        started = set()
+        gate = threading.Event()
+
+        def reader(idx):
+            started.update(int(i) // pl_.records_per_step
+                           for i in idx.reshape(-1))
+            gate.wait(timeout=5.0)
+            return np.zeros((idx.size, m.record_size), np.float32)
+
+        ld = SpeculativeLoader(reader, pl_, workers=8, overdecompose=1,
+                               depth=2, min_speculate_sec=30.0,
+                               speculate_factor=1e9)
+        it = iter(ld)
+        first = []
+        consumer = threading.Thread(target=lambda: first.append(next(it)))
+        consumer.start()            # blocks on step 0 behind the gate
+        deadline = time.monotonic() + 5.0
+        while started != {0, 1} and time.monotonic() < deadline:
+            time.sleep(0.005)
+        assert started == {0, 1}              # depth=2, not 3, not 1
+        gate.set()
+        consumer.join(timeout=5.0)
+        step, payload, mask = first[0]
+        assert step == 0 and payload.shape == (1, 2, m.record_size)
+        it.close()
+        ld.close()
+
+    def test_windowed_iteration_resumes_mid_plan(self, tmp_path):
+        """iter_steps(start, stop) — what a resumed job drives — yields
+        exactly the requested window with correct payloads."""
+        write_dataset(str(tmp_path), M)
+        reader = WavRecordReader(str(tmp_path), M)
+        pl_ = plan(M, 2, 3)
+        ld = SpeculativeLoader(reader, pl_, workers=2, overdecompose=2)
+        got = list(ld.iter_steps(1, pl_.n_steps))
+        ld.close()
+        assert [s for s, _, _ in got] == list(range(1, pl_.n_steps))
+        for step, payload, mask in got:
+            assert np.allclose(payload, reader(pl_.step_indices(step)))
+
+    def test_clean_shutdown(self):
+        """close() stops both pools (idempotently); the loader refuses
+        new work afterwards instead of hanging."""
+        def reader(idx):
+            return np.zeros((idx.size, 8), np.float32)
+
+        m = DatasetManifest(2, 4, 8, 100.0)
+        ld = SpeculativeLoader(reader, plan(m, 1, 2), workers=2)
+        list(ld)                               # full pass, then shutdown
+        ld.close()
+        ld.close()                             # idempotent
+        with pytest.raises(RuntimeError):
+            ld.step_pool.submit(lambda: None)
+        with pytest.raises(RuntimeError):
+            ld.read_pool.submit(lambda: None)
 
 
 class TestFeatureStore:
