@@ -86,4 +86,10 @@ def run(n_records=32, record_sec=0.25, sleep_ms_per_record=3.0, iters=2,
 
 
 if __name__ == "__main__":
-    print("\n".join(run(min_speedup=1.3)))
+    import sys
+    if "--smoke" in sys.argv:
+        # CI gate: tiny job, loose speedup bound for noisy runners —
+        # catches re-serialization of the pipeline, not 5% drift
+        print("\n".join(run(n_records=16, iters=1, min_speedup=1.1)))
+    else:
+        print("\n".join(run(min_speedup=1.3)))

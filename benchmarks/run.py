@@ -14,7 +14,8 @@ def main() -> None:
     rows = ["name,us_per_call,derived"]
 
     from benchmarks import async_pipeline, fig3_1_single_node, \
-        fig3_2_speedup, job_pipeline, table2_1_param_sets, roofline_report
+        fig3_2_speedup, job_pipeline, table2_1_param_sets, \
+        roofline_report, wav_io
 
     rows += fig3_1_single_node.run(
         workload_records=(4, 8) if fast else (4, 8, 16))
@@ -24,6 +25,9 @@ def main() -> None:
                              iters=2 if fast else 3)
     rows += async_pipeline.run(n_records=16 if fast else 32,
                                iters=1 if fast else 2)
+    rows += wav_io.run(file_records=(6, 10, 4, 8) if fast
+                       else (24, 40, 16, 32, 8, 48),
+                       iters=2 if fast else 3)
     rows += roofline_report.run()
 
     print("\n".join(rows))

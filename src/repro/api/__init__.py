@@ -42,6 +42,7 @@ from .features import (FeatureContext, FeatureSpec, EpochAggregate,
                        register, resolve_features, unregister)
 from .sources import (PrefetchSource, ReaderSource, Source, SynthSource,
                       WavSource, as_source)
+from repro.data.wavio import scan_dataset
 from .sinks import (AsyncSink, CallbackSink, MemorySink, Sink, StoreSink,
                     as_sink)
 from .job import JobResult, SoundscapeJob, job
@@ -52,7 +53,7 @@ __all__ = [
     "SPECTRUM_PERCENTILES", "feature_names", "get_feature", "register",
     "resolve_features", "unregister",
     "Source", "SynthSource", "ReaderSource", "WavSource", "PrefetchSource",
-    "as_source",
+    "as_source", "scan_dataset",
     "Sink", "MemorySink", "StoreSink", "CallbackSink", "AsyncSink",
     "as_sink",
     "SoundscapeJob", "JobResult", "job",

@@ -279,6 +279,7 @@ def run_job(m: DatasetManifest, p: DepamParams, specs: list[FeatureSpec],
     finally:
         if stream is not None:
             stream.close()
+        source.close()
         sink.close()
 
     live = int(agg_state.pop("__live__"))    # the one job-end transfer

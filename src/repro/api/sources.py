@@ -90,6 +90,12 @@ class Source:
         for step in range(start, stop):
             yield self.fetch(plan.step_indices(step))
 
+    def close(self) -> None:
+        """Release IO resources (file handles, connections); called by
+        the engine when the job finishes (or dies).  ``bind`` re-attaches
+        them, so a closed source can run again.  Safe to call twice."""
+        pass
+
 
 class SynthSource(Source):
     """On-device synthesis from the manifest seed (no host IO)."""
@@ -111,20 +117,45 @@ class ReaderSource(Source):
 
 
 class WavSource(Source):
-    """Seek-based reads from a directory of manifest-layout wav files."""
+    """Reads from a directory of wav files laid out by the manifest
+    (uniform miniatures or a real heterogeneous corpus scanned by
+    :func:`repro.data.wavio.scan_dataset`).
 
-    def __init__(self, root: str):
+    By default reads go through the block-coalesced
+    :class:`~repro.data.wavio.BlockReader` — indices grouped by file,
+    contiguous runs merged into single reads, handles cached in a
+    bounded LRU — which is bitwise-identical to the per-record path
+    (``coalesced=False``, the debugging oracle).  ``calibration``
+    applies a pypam-style per-file sensitivity gain; ``max_open_files``
+    bounds the handle cache.
+    """
+
+    def __init__(self, root: str, coalesced: bool = True,
+                 max_open_files: int = 8, calibration=None):
         self.root = root
+        self.coalesced = coalesced
+        self.max_open_files = max_open_files
+        self.calibration = calibration
         self._reader: Callable | None = None
 
     def bind(self, m: DatasetManifest, p: DepamParams) -> "WavSource":
-        from repro.data.wavio import WavRecordReader
-        self._reader = WavRecordReader(self.root, m)
+        from repro.data.wavio import BlockReader, WavRecordReader
+        if self.coalesced:
+            self._reader = BlockReader(
+                self.root, m, max_open_files=self.max_open_files,
+                calibration=self.calibration)
+        else:
+            self._reader = WavRecordReader(
+                self.root, m, calibration=self.calibration)
         return self
 
     def fetch(self, indices: np.ndarray) -> np.ndarray:
         assert self._reader is not None, "WavSource used before bind()"
         return np.asarray(self._reader(indices), np.float32)
+
+    def close(self) -> None:
+        if self._reader is not None and hasattr(self._reader, "close"):
+            self._reader.close()
 
 
 class PrefetchSource(Source):
@@ -159,22 +190,32 @@ class PrefetchSource(Source):
         self.speculate_factor = speculate_factor
         self.min_speculate_sec = min_speculate_sec
         self.last_stats: dict | None = None
+        self._manifest: DatasetManifest | None = None
 
     def bind(self, m: DatasetManifest, p: DepamParams) -> "PrefetchSource":
         self.inner = self.inner.bind(m, p)
+        self._manifest = m
         return self
 
     def fetch(self, indices: np.ndarray) -> np.ndarray:
         return self.inner.fetch(indices)
 
+    def close(self) -> None:
+        self.inner.close()
+
     def stream(self, plan: ShardPlan, start: int,
                stop: int) -> Iterator[np.ndarray]:
         from repro.data.loader import SpeculativeLoader
+        # read tasks split along the manifest's file boundaries (when
+        # bound), so each task coalesces into sequential IO on one file
+        boundaries = None if self._manifest is None \
+            else self._manifest.file_offsets
         loader = SpeculativeLoader(
             self.inner.fetch, plan, workers=self.workers,
             overdecompose=self.overdecompose, depth=self.depth,
             speculate_factor=self.speculate_factor,
-            min_speculate_sec=self.min_speculate_sec)
+            min_speculate_sec=self.min_speculate_sec,
+            boundaries=boundaries)
         try:
             for _step, payload, _mask in loader.iter_steps(start, stop):
                 yield payload

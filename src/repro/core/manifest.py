@@ -7,6 +7,16 @@ manifest*: a pure function record_index -> (file, offset) over the dataset,
 plus a planner that carves the record index space into equal contiguous
 shards, one per data-parallel device.
 
+Datasets come in two layouts:
+
+  * **uniform** — ``n_files`` files of ``records_per_file`` records each
+    (synthetic miniatures; ``locate`` is a ``divmod``);
+  * **variable** — ``file_records`` gives the per-file record count (the
+    real 1807 x 45-min corpus is heterogeneous: clipped deployments,
+    duty-cycled recorders).  ``locate`` becomes a binary search over the
+    cumulative offsets, and ``file_names`` can pin arbitrary on-disk
+    names discovered by ``repro.data.wavio.scan_dataset``.
+
 Determinism is the fault-tolerance story (Spark lineage): any shard can be
 recomputed from scratch by any worker because the mapping is stateless.
 The planner also supports *elastic replanning* — given a committed cursor
@@ -16,22 +26,57 @@ remaining records (what YARN re-allocation + Spark dynamic allocation do).
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
 class DatasetManifest:
-    """A dataset of ``n_files`` files, each ``records_per_file`` records."""
+    """A dataset of ``n_files`` wav-like files of known record counts.
+
+    Uniform datasets set ``records_per_file``; variable datasets set
+    ``file_records`` (one count per file, ``records_per_file`` ignored).
+    Instances stay frozen/hashable — they key the engine's compile cache.
+    """
 
     n_files: int
     records_per_file: int
     record_size: int          # samples per record
     fs: float
     seed: int = 0             # generation seed for synthetic datasets
+    file_records: tuple[int, ...] | None = None   # variable layout
+    file_names: tuple[str, ...] | None = None     # on-disk names
+
+    def __post_init__(self):
+        if self.file_records is not None:
+            if len(self.file_records) != self.n_files:
+                raise ValueError(
+                    f"file_records has {len(self.file_records)} entries "
+                    f"for n_files={self.n_files}")
+            if any(r < 0 for r in self.file_records):
+                raise ValueError("file_records entries must be >= 0")
+        if self.file_names is not None \
+                and len(self.file_names) != self.n_files:
+            raise ValueError(
+                f"file_names has {len(self.file_names)} entries "
+                f"for n_files={self.n_files}")
+
+    @classmethod
+    def from_files(cls, file_records, record_size: int, fs: float,
+                   file_names=None, seed: int = 0) -> "DatasetManifest":
+        """Variable-layout constructor: one record count per file."""
+        fr = tuple(int(r) for r in file_records)
+        return cls(n_files=len(fr), records_per_file=0,
+                   record_size=record_size, fs=fs, seed=seed,
+                   file_records=fr,
+                   file_names=None if file_names is None
+                   else tuple(file_names))
 
     @property
     def n_records(self) -> int:
+        if self.file_records is not None:
+            return int(sum(self.file_records))
         return self.n_files * self.records_per_file
 
     @property
@@ -39,9 +84,41 @@ class DatasetManifest:
         """Workload size in GB assuming float32 samples (paper reports GB)."""
         return self.n_records * self.record_size * 4 / 1e9
 
+    @functools.cached_property
+    def file_offsets(self) -> np.ndarray:
+        """Cumulative record offsets, shape (n_files + 1,): file ``i``
+        owns global records [offsets[i], offsets[i+1])."""
+        counts = np.asarray(self.file_records, np.int64) \
+            if self.file_records is not None \
+            else np.full(self.n_files, self.records_per_file, np.int64)
+        return np.concatenate([[0], np.cumsum(counts)])
+
+    def records_in_file(self, file_idx: int) -> int:
+        if self.file_records is not None:
+            return self.file_records[file_idx]
+        return self.records_per_file
+
+    def file_name(self, file_idx: int) -> str:
+        if self.file_names is not None:
+            return self.file_names[file_idx]
+        return f"file_{file_idx:05d}.wav"
+
     def locate(self, record_idx: int) -> tuple[int, int]:
         """record index -> (file index, record-within-file index)."""
-        return divmod(record_idx, self.records_per_file)
+        if self.file_records is None:
+            return divmod(record_idx, self.records_per_file)
+        off = self.file_offsets
+        fi = int(np.searchsorted(off, record_idx, side="right")) - 1
+        return fi, int(record_idx - off[fi])
+
+    def locate_many(self, record_idx: np.ndarray
+                    ) -> tuple[np.ndarray, np.ndarray]:
+        """Vectorized ``locate`` for a batch of indices (the block-IO
+        hot path): returns (file indices, record-within-file indices)."""
+        idx = np.asarray(record_idx, np.int64)
+        off = self.file_offsets
+        fi = np.searchsorted(off, idx, side="right") - 1
+        return fi, idx - off[fi]
 
 
 @dataclasses.dataclass(frozen=True)

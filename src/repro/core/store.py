@@ -63,6 +63,11 @@ class FeatureStore:
                         f"store layout mismatch for {name!r}: on disk "
                         f"{tuple(mm.shape)}, requested {tuple(shape)} "
                         f"(did the feature set or params change?)")
+                if mm.dtype != np.float32:
+                    raise ValueError(
+                        f"store dtype mismatch for {name!r}: on disk "
+                        f"{mm.dtype}, expected float32 (stale array "
+                        f"from another tool? use a fresh store dir)")
                 out[name] = mm
             else:
                 out[name] = np.lib.format.open_memmap(

@@ -39,10 +39,16 @@ class SpeculativeLoader:
                  plan: ShardPlan, workers: int = 4,
                  overdecompose: int = 4, depth: int = 2,
                  speculate_factor: float = 4.0,
-                 min_speculate_sec: float = 0.05):
+                 min_speculate_sec: float = 0.05,
+                 boundaries: np.ndarray | None = None):
         self.reader = reader
         self.plan = plan
         self.overdecompose = max(1, overdecompose)
+        # sorted global record offsets at which a new file/block begins
+        # (a manifest's ``file_offsets``); when given, read tasks split
+        # along these boundaries — the HDFS block-locality analogue
+        self.boundaries = None if boundaries is None \
+            else np.asarray(boundaries, np.int64)
         self.depth = max(1, depth)
         self.speculate_factor = speculate_factor
         self.min_speculate_sec = min_speculate_sec
@@ -62,12 +68,38 @@ class SpeculativeLoader:
             self.durations.append(time.monotonic() - t0)
         return out
 
+    def _split_step(self, flat: np.ndarray) -> list[np.ndarray]:
+        """Split one step's (ascending) record indices into read tasks.
+
+        Without ``boundaries``: ~equal arbitrary slices.  With them:
+        cut wherever the indices cross a file/block boundary first, so a
+        read task never straddles two files (each task coalesces into
+        sequential IO on one handle), then rebalance toward
+        ``overdecompose`` tasks — file runs larger than the target size
+        are re-split at record granularity (a one-file dataset still
+        over-decomposes), adjacent smaller runs merge up to the target
+        (a many-tiny-files dataset doesn't explode the task count).
+        """
+        if self.boundaries is None:
+            return [p for p in np.array_split(flat, self.overdecompose)
+                    if p.size]
+        target = -(-flat.size // self.overdecompose)       # ceil
+        fid = np.searchsorted(self.boundaries, flat, side="right")
+        cuts = np.nonzero(np.diff(fid))[0] + 1
+        parts: list[np.ndarray] = []
+        for run in np.split(flat, cuts):
+            if parts and parts[-1].size + run.size <= target:
+                parts[-1] = np.concatenate([parts[-1], run])
+                continue
+            for i in range(0, run.size, target):
+                parts.append(run[i:i + target])
+        return [p for p in parts if p.size]
+
     # -- step assembly (runs on step_pool; blocks only on read_pool) ----
     def _load_step(self, step: int) -> tuple[np.ndarray, np.ndarray]:
         idx = self.plan.step_indices(step)
         flat = idx.reshape(-1)
-        parts = [p for p in np.array_split(flat, self.overdecompose)
-                 if p.size]
+        parts = self._split_step(flat)
         futs = {i: self.read_pool.submit(self._timed_read, p)
                 for i, p in enumerate(parts)}
         results: dict[int, np.ndarray] = {}
@@ -85,14 +117,27 @@ class SpeculativeLoader:
                 # cf.TimeoutError is NOT the builtin TimeoutError until
                 # Python 3.11; catch both spellings.
                 except (cf.TimeoutError, TimeoutError):
-                    # straggler: launch a duplicate, first one wins
+                    # straggler: launch a duplicate, first SUCCESS wins.
+                    # FIRST_COMPLETED can return a copy that *raised*
+                    # (and `done` may hold both copies), so keep waiting
+                    # while any copy is still running and only raise
+                    # once every copy has failed.
                     with self._lock:
                         self.speculated += 1
                     backup = self.read_pool.submit(self._timed_read,
                                                    parts[i])
-                    done, _ = cf.wait([fut, backup],
-                                      return_when=cf.FIRST_COMPLETED)
-                    results[i] = next(iter(done)).result()
+                    waiting = {fut, backup}
+                    while True:
+                        done, waiting = cf.wait(
+                            waiting, return_when=cf.FIRST_COMPLETED)
+                        ok = next((f for f in done
+                                   if not f.cancelled()
+                                   and f.exception() is None), None)
+                        if ok is not None:
+                            results[i] = ok.result()
+                            break
+                        if not waiting:     # every copy failed
+                            next(iter(done)).result()   # re-raise
         out = np.concatenate([results[i] for i in range(len(parts))], axis=0)
         return out.reshape(*idx.shape, -1), self.plan.step_mask(step)
 

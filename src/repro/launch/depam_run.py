@@ -7,7 +7,14 @@ Spark job in the paper:
   PYTHONPATH=src python -m repro.launch.depam_run \
       --param-set 1 --files 8 --record-sec 5 --out /tmp/depam \
       [--features welch,spl,tol,percentiles] [--wav-dir /path/to/wavs] \
-      [--prefetch-depth 2] [--sync-io]
+      [--data-root /path/to/real/wavs] [--prefetch-depth 2] [--sync-io]
+
+Dataset selection: the default is a synthetic uniform manifest
+(``--files`` x ``--records-per-file``), optionally read from matching
+wav files with ``--wav-dir``.  ``--data-root`` instead SCANS a real
+directory — heterogeneous file lengths, arbitrary names — and builds
+the manifest from the wav headers (``scan_dataset``); reads go through
+the block-coalesced ``BlockReader``.
 
 The pipelined executor is on by default: host reads prefetch
 ``--prefetch-depth`` steps ahead through the SpeculativeLoader, device
@@ -59,7 +66,14 @@ def main() -> None:
                     help="comma-separated registered features "
                          f"(available: {','.join(api.feature_names())})")
     ap.add_argument("--out", required=True)
-    ap.add_argument("--wav-dir", default=None)
+    ap.add_argument("--wav-dir", default=None,
+                    help="read records from manifest-layout wav files "
+                         "(written by repro.data.wavio.write_dataset)")
+    ap.add_argument("--data-root", default=None,
+                    help="scan a REAL wav directory: manifest built "
+                         "from the file headers (heterogeneous lengths "
+                         "ok; overrides --files/--records-per-file/"
+                         "--wav-dir)")
     ap.add_argument("--no-kernels", action="store_true")
     ap.add_argument("--prefetch-depth", type=int, default=2,
                     help="plan steps of host read-ahead for the "
@@ -72,8 +86,19 @@ def main() -> None:
     base = PARAM_SET_1 if a.param_set == 1 else PARAM_SET_2
     p = base if a.record_sec is None else dataclasses.replace(
         base, record_size_sec=a.record_sec)
-    m = DatasetManifest(n_files=a.files, records_per_file=a.records_per_file,
-                        record_size=p.record_size, fs=p.fs, seed=42)
+    if a.data_root:
+        m = api.scan_dataset(a.data_root, p.record_size, seed=42)
+        if m.fs != p.fs:
+            print(f"[depam] WARNING: dataset is {m.fs:.0f} Hz but param "
+                  f"set {a.param_set} assumes {p.fs:.0f} Hz — frequency "
+                  f"axes will be off; pick the matching param set")
+        counts = [m.records_in_file(i) for i in range(m.n_files)]
+        print(f"[depam] scanned {a.data_root}: {m.n_files} files, "
+              f"{min(counts)}-{max(counts)} records/file")
+    else:
+        m = DatasetManifest(n_files=a.files,
+                            records_per_file=a.records_per_file,
+                            record_size=p.record_size, fs=p.fs, seed=42)
     feats = [f.strip() for f in a.features.split(",") if f.strip()]
     print(f"[depam] param set {a.param_set} (nfft={p.nfft}, "
           f"overlap={p.window_overlap}); dataset {m.n_records} records "
@@ -82,8 +107,9 @@ def main() -> None:
     store = FeatureStore(a.out)
     j = (api.job(m, p).features(*feats).chunk(a.chunk_records)
          .kernels(not a.no_kernels).to(store))
-    if a.wav_dir:
-        j = j.source(api.WavSource(a.wav_dir))
+    wav_dir = a.data_root or a.wav_dir
+    if wav_dir:
+        j = j.source(api.WavSource(wav_dir))
     if not a.sync_io:
         j = j.async_io(depth=a.prefetch_depth)
     mode = "sync" if a.sync_io else \

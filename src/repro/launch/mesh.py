@@ -17,6 +17,11 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh(model: int = 1):
     """Mesh over whatever devices exist (CPU smoke / tiny CI meshes)."""
     n = len(jax.devices())
+    if model < 1 or n % model != 0:
+        raise ValueError(
+            f"make_host_mesh(model={model}): {n} visible device(s) "
+            f"cannot form a (data={n}//{model}, model={model}) mesh — "
+            f"device count must be a positive multiple of `model`")
     return jax.make_mesh((n // model, model), ("data", "model"))
 
 

@@ -1,10 +1,32 @@
-"""Manifest / shard-plan invariants (fault tolerance + elasticity)."""
+"""Manifest / shard-plan invariants (fault tolerance + elasticity).
+
+Property-based classes skip without hypothesis (an optional dev
+dependency); the deterministic edge-case classes always run.
+"""
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis",
-                    reason="optional dev dependency: pip install hypothesis")
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # stubs so decorators at class-body time work
+    HAVE_HYPOTHESIS = False
+
+    def given(*a, **k):
+        return lambda f: f
+
+    def settings(*a, **k):
+        return lambda f: f
+
+    class _St:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _St()
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS,
+    reason="optional dev dependency: pip install hypothesis")
 
 from repro.core.manifest import DatasetManifest, ShardPlan, plan, replan
 
@@ -18,6 +40,7 @@ def _covered(p: ShardPlan, from_step=0, to_step=None):
     return out
 
 
+@needs_hypothesis
 class TestPlan:
     @given(n_files=st.integers(1, 20), rpf=st.integers(1, 20),
            shards=st.integers(1, 9), chunk=st.integers(1, 7))
@@ -66,3 +89,88 @@ class TestPlan:
         idx = p.step_indices(0)
         for s in range(4):
             assert (np.diff(idx[s]) == 1).all()
+
+
+class TestPlanBoundaries:
+    """replan/cursor_after at the edges: nothing committed, everything
+    committed, empty remainder."""
+
+    M = DatasetManifest(4, 4, 10, 10.0)        # 16 records
+
+    def test_replan_zero_committed_keeps_start(self):
+        p1 = plan(self.M, 2, 3)
+        p2 = replan(p1, 0, 5)
+        assert (p2.start, p2.stop) == (p1.start, p1.stop)
+        assert p2.n_shards == 5
+        assert _covered(p2) == set(range(16))
+
+    def test_replan_all_committed_is_empty(self):
+        p1 = plan(self.M, 2, 3)
+        assert p1.cursor_after(p1.n_steps - 1) == 16   # clamped to stop
+        p2 = replan(p1, p1.n_steps, 3)
+        assert p2.start == p2.stop == 16
+        assert p2.n_steps == 0 and p2.n_live == 0
+        assert _covered(p2) == set()
+
+    def test_empty_remainder_plan_is_inert(self):
+        p = ShardPlan(start=16, stop=16, n_shards=2, chunk_records=4)
+        assert p.n_steps == 0
+        assert p.cursor_after(0) == 16                 # clamped, no overrun
+
+    def test_cursor_never_exceeds_stop(self):
+        p = plan(self.M, 3, 5)                         # padded final step
+        assert p.cursor_after(p.n_steps - 1) == 16
+        assert p.cursor_after(p.n_steps + 10) == 16
+
+
+class TestVariableManifest:
+    """Variable per-file record counts: searchsorted locate, offsets,
+    and validation."""
+
+    M = DatasetManifest.from_files([3, 7, 0, 5], record_size=10, fs=10.0)
+
+    def test_counts_and_offsets(self):
+        assert self.M.n_records == 15
+        assert self.M.file_offsets.tolist() == [0, 3, 10, 10, 15]
+        assert [self.M.records_in_file(i) for i in range(4)] == [3, 7, 0, 5]
+
+    def test_locate_roundtrip_skips_empty_files(self):
+        for i in range(self.M.n_records):
+            fi, ri = self.M.locate(i)
+            assert 0 <= ri < self.M.records_in_file(fi)
+            assert self.M.file_offsets[fi] + ri == i
+        assert self.M.locate(10) == (3, 0)     # file 2 has zero records
+
+    def test_locate_many_matches_scalar(self):
+        idx = np.arange(self.M.n_records)
+        fi, ri = self.M.locate_many(idx)
+        want = [self.M.locate(int(i)) for i in idx]
+        assert fi.tolist() == [f for f, _ in want]
+        assert ri.tolist() == [r for _, r in want]
+
+    def test_uniform_manifest_unchanged(self):
+        m = DatasetManifest(3, 4, 10, 10.0)
+        assert m.locate(7) == divmod(7, 4)
+        fi, ri = m.locate_many(np.arange(12))
+        assert all((f, r) == divmod(i, 4)
+                   for i, (f, r) in enumerate(zip(fi, ri)))
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="file_records"):
+            DatasetManifest(2, 0, 10, 10.0, file_records=(1, 2, 3))
+        with pytest.raises(ValueError, match=">= 0"):
+            DatasetManifest.from_files([3, -1], 10, 10.0)
+        with pytest.raises(ValueError, match="file_names"):
+            DatasetManifest(2, 4, 10, 10.0, file_names=("a.wav",))
+
+    def test_hashable_for_compile_cache(self):
+        assert hash(self.M) == hash(DatasetManifest.from_files(
+            [3, 7, 0, 5], record_size=10, fs=10.0))
+
+    @pytest.mark.parametrize("counts", [[1], [0, 0, 3], [5, 1, 4, 2],
+                                        [2] * 8, [0]])
+    @pytest.mark.parametrize("shards,chunk", [(1, 3), (2, 2), (3, 4)])
+    def test_plan_covers_variable_manifest(self, counts, shards, chunk):
+        m = DatasetManifest.from_files(counts, record_size=8, fs=10.0)
+        p = plan(m, shards, chunk)
+        assert _covered(p) == set(range(m.n_records))

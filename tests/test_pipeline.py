@@ -1,4 +1,5 @@
 """End-to-end DEPAM pipeline: oracle equivalence, resume, loader."""
+import itertools
 import os
 import tempfile
 import threading
@@ -151,6 +152,48 @@ class TestSpeculativeLoader:
         for step, payload, mask in got:
             assert np.allclose(payload, reader(pl_.step_indices(step)))
 
+    def test_speculation_prefers_successful_copy(self):
+        """A speculated task's primary can FAIL after the backup was
+        launched; FIRST_COMPLETED then returns the raised future first.
+        The loader must keep waiting for the surviving copy instead of
+        re-raising — only an all-copies failure aborts the step."""
+        calls = itertools.count()
+        lock = threading.Lock()
+        n_cols = 8
+
+        def flaky(idx):
+            with lock:
+                n = next(calls)
+            if n == 1:               # step 1 primary: slow, then dies
+                time.sleep(0.25)
+                raise IOError("injected disk hiccup")
+            if n == 2:               # step 1 backup: succeeds later
+                time.sleep(0.35)
+            return np.tile(np.asarray(idx, np.float32)[:, None],
+                           (1, n_cols))
+
+        m = DatasetManifest(2, 2, n_cols, 100.0)
+        pl_ = plan(m, 1, 2)
+        ld = SpeculativeLoader(flaky, pl_, workers=2, overdecompose=1,
+                               depth=1, speculate_factor=2.0,
+                               min_speculate_sec=0.05)
+        steps = list(ld.iter_steps())      # raised IOError before the fix
+        ld.close()
+        assert ld.speculated >= 1
+        for step, payload, _mask in steps:
+            want = pl_.step_indices(step).astype(np.float32)[..., None]
+            assert np.array_equal(payload, np.tile(want, (1, 1, n_cols)))
+
+    def test_all_copies_failing_raises(self):
+        def broken(idx):
+            raise IOError("disk gone")
+
+        m = DatasetManifest(1, 4, 8, 100.0)
+        ld = SpeculativeLoader(broken, plan(m, 1, 2), workers=2)
+        with pytest.raises(IOError):
+            list(ld)
+        ld.close()
+
     def test_clean_shutdown(self):
         """close() stops both pools (idempotently); the loader refuses
         new work afterwards instead of hanging."""
@@ -182,3 +225,23 @@ class TestFeatureStore:
     def test_no_cursor_means_zero_steps(self, tmp_path):
         st = FeatureStore(str(tmp_path))
         assert st.committed_steps(plan(M, 1, 4)) == 0
+
+    def test_stale_dtype_fails_loudly(self, tmp_path):
+        """A non-float32 array left by another tool must not silently
+        pass the reopen validation (shape alone can match)."""
+        np.save(str(tmp_path / "welch.npy"),
+                np.zeros((M.n_records, P.n_bins), np.float64))
+        st = FeatureStore(str(tmp_path))
+        with pytest.raises(ValueError, match="dtype"):
+            st.open_arrays({"welch": (M.n_records, P.n_bins)})
+
+
+class TestHostMesh:
+    def test_indivisible_device_count_raises(self):
+        import jax
+        from repro.launch.mesh import make_host_mesh
+        n = len(jax.devices())
+        with pytest.raises(ValueError, match=f"{n} visible device"):
+            make_host_mesh(model=n + 1)
+        with pytest.raises(ValueError):
+            make_host_mesh(model=0)

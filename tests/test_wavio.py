@@ -1,0 +1,254 @@
+"""Block-coalesced wav IO: scan/round-trip, bitwise equivalence to the
+per-record oracle, open-count coalescing, handle cache, calibration,
+truncation errors, and the heterogeneous end-to-end resume path."""
+import concurrent.futures as cf
+import os
+import wave
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core.manifest import DatasetManifest, plan
+from repro.core.params import DepamParams
+from repro.core.store import FeatureStore
+from repro.data.loader import SpeculativeLoader
+from repro.data.wavio import (BlockReader, WavRecordReader, scan_dataset,
+                              write_dataset)
+
+P = DepamParams(nfft=256, window_size=256, window_overlap=128,
+                record_size_sec=0.25)
+COUNTS = (3, 7, 1, 5)       # heterogeneous, like the real corpus
+
+
+def het_manifest(record_size=P.record_size, fs=P.fs, counts=COUNTS):
+    return DatasetManifest.from_files(counts, record_size=record_size,
+                                      fs=fs, seed=5)
+
+
+class TestScanDataset:
+    def test_roundtrip_recovers_layout(self, tmp_path):
+        m = het_manifest()
+        write_dataset(str(tmp_path), m)
+        got = scan_dataset(str(tmp_path), P.record_size)
+        assert got.file_records == COUNTS
+        assert got.n_records == sum(COUNTS)
+        assert got.fs == P.fs
+        assert got.file_names == tuple(sorted(
+            f for f in os.listdir(tmp_path) if f.endswith(".wav")))
+
+    def test_partial_tail_record_dropped(self, tmp_path):
+        m = het_manifest(record_size=100, counts=(2,))
+        write_dataset(str(tmp_path), m)
+        with wave.open(str(tmp_path / "extra.wav"), "wb") as w:
+            w.setnchannels(1)
+            w.setsampwidth(2)
+            w.setframerate(int(P.fs))
+            w.writeframes(b"\x00\x00" * 150)     # 1.5 records
+        got = scan_dataset(str(tmp_path), 100)
+        assert got.file_records == (1, 2)        # sorted: extra, file_00000
+
+    def test_empty_dir_and_fs_mismatch_raise(self, tmp_path):
+        with pytest.raises(FileNotFoundError):
+            scan_dataset(str(tmp_path), 100)
+        write_dataset(str(tmp_path), het_manifest())
+        with pytest.raises(ValueError, match="Hz"):
+            scan_dataset(str(tmp_path), P.record_size, fs=48000.0)
+
+
+class TestBlockReader:
+    @pytest.mark.parametrize("shards,chunk", [(1, 16), (2, 3), (3, 5),
+                                              (4, 4), (1, 1)])
+    def test_bitwise_identical_to_per_record(self, tmp_path, shards, chunk):
+        m = het_manifest()
+        write_dataset(str(tmp_path), m)
+        oracle = WavRecordReader(str(tmp_path), m)
+        block = BlockReader(str(tmp_path), m, max_open_files=2)
+        pl = plan(m, shards, chunk)
+        for step in range(pl.n_steps):      # includes padded final steps
+            idx = pl.step_indices(step)
+            a, b = oracle(idx), block(idx)
+            assert a.dtype == b.dtype == np.float32
+            assert np.array_equal(a, b)
+        block.close()
+
+    def test_coalescing_cuts_file_opens_5x(self, tmp_path):
+        m = DatasetManifest(n_files=4, records_per_file=16,
+                            record_size=256, fs=1000.0, seed=2)
+        write_dataset(str(tmp_path), m)
+        oracle = WavRecordReader(str(tmp_path), m)
+        block = BlockReader(str(tmp_path), m, max_open_files=8)
+        pl = plan(m, 2, 8)
+        for step in range(pl.n_steps):
+            assert np.array_equal(oracle(pl.step_indices(step)),
+                                  block(pl.step_indices(step)))
+        assert oracle.file_opens == m.n_records       # one open per record
+        assert block.file_opens * 5 <= oracle.file_opens
+        # contiguous shard-chunks inside one file coalesce into ONE read
+        assert block.reads < m.n_records / 5
+        block.close()
+
+    def test_handle_cache_is_bounded(self, tmp_path):
+        m = DatasetManifest(n_files=6, records_per_file=4,
+                            record_size=64, fs=1000.0, seed=3)
+        write_dataset(str(tmp_path), m)
+        block = BlockReader(str(tmp_path), m, max_open_files=2)
+        idx = np.arange(m.n_records)
+        want = WavRecordReader(str(tmp_path), m)(idx)
+        for _ in range(3):
+            assert np.array_equal(block(idx), want)
+        cache = block._cache
+        assert sum(len(v) for v in cache._idle.values()) <= 2
+        block.close()
+        assert sum(len(v) for v in cache._idle.values()) == 0
+
+    def test_concurrent_fetches_are_safe(self, tmp_path):
+        """PrefetchSource calls fetch from a thread pool — concurrent
+        sub-slice reads must not corrupt each other through the cache."""
+        m = het_manifest()
+        write_dataset(str(tmp_path), m)
+        block = BlockReader(str(tmp_path), m, max_open_files=2)
+        oracle = WavRecordReader(str(tmp_path), m)
+        slices = [np.arange(i, m.n_records, 3) for i in range(3)] * 4
+        want = [oracle(s) for s in slices]
+        with cf.ThreadPoolExecutor(max_workers=6) as pool:
+            got = list(pool.map(block, slices))
+        for w, g in zip(want, got):
+            assert np.array_equal(w, g)
+        block.close()
+
+    def test_calibration_gain_per_file(self, tmp_path):
+        m = het_manifest()
+        write_dataset(str(tmp_path), m)
+        gains = np.linspace(0.5, 2.0, m.n_files).astype(np.float32)
+        plain = BlockReader(str(tmp_path), m)
+        cal = BlockReader(str(tmp_path), m, calibration=gains)
+        oracle = WavRecordReader(str(tmp_path), m, calibration=gains)
+        idx = np.arange(m.n_records)
+        got, ref = cal(idx), plain(idx)
+        assert np.array_equal(got, oracle(idx))       # both paths agree
+        fi, _ = m.locate_many(idx)
+        assert np.array_equal(got, ref * gains[fi][:, None])
+        with pytest.raises(ValueError, match="one gain per file"):
+            BlockReader(str(tmp_path), m, calibration=np.ones(2))
+        plain.close()
+        cal.close()
+
+    def test_truncated_file_raises_clearly(self, tmp_path):
+        m = het_manifest(record_size=128, counts=(4,))
+        [path] = write_dataset(str(tmp_path), m)
+        with open(path, "r+b") as f:                  # chop the last record
+            f.truncate(os.path.getsize(path) - 128 * 2)
+        oracle = WavRecordReader(str(tmp_path), m)
+        block = BlockReader(str(tmp_path), m)
+        with pytest.raises(ValueError, match="truncated"):
+            oracle(np.arange(4))
+        with pytest.raises(ValueError, match="truncated"):
+            block(np.arange(4))
+        # wave rejects setpos past EOF for fully-missing records
+        with pytest.raises((ValueError, wave.Error)):
+            oracle.read_one(3)
+        block.close()
+
+
+class TestBlockAlignedOverdecomposition:
+    def test_read_tasks_respect_file_boundaries(self):
+        m = DatasetManifest.from_files([4, 4, 4, 4], record_size=8,
+                                       fs=100.0)
+        pl = plan(m, 1, 16)
+        ld = SpeculativeLoader(lambda i: np.zeros((i.size, 8), np.float32),
+                               pl, overdecompose=4,
+                               boundaries=m.file_offsets)
+        parts = ld._split_step(pl.step_indices(0).reshape(-1))
+        ld.close()
+        assert len(parts) == 4
+        for part in parts:
+            files = {int(i) // 4 for i in part.tolist()}
+            assert len(files) == 1          # never straddles two files
+        assert np.array_equal(np.concatenate(parts), np.arange(16))
+
+    def test_single_file_still_overdecomposes(self):
+        m = DatasetManifest(1, 32, 8, 100.0)
+        ld = SpeculativeLoader(lambda i: np.zeros((i.size, 8), np.float32),
+                               plan(m, 1, 32), overdecompose=4,
+                               boundaries=m.file_offsets)
+        parts = ld._split_step(np.arange(32))
+        ld.close()
+        assert len(parts) == 4
+        assert np.array_equal(np.concatenate(parts), np.arange(32))
+
+    def test_tiny_files_merge_instead_of_exploding(self):
+        m = DatasetManifest.from_files([1] * 16, record_size=8, fs=100.0)
+        ld = SpeculativeLoader(lambda i: np.zeros((i.size, 8), np.float32),
+                               plan(m, 1, 16), overdecompose=4,
+                               boundaries=m.file_offsets)
+        parts = ld._split_step(np.arange(16))
+        ld.close()
+        assert len(parts) == 4              # merged up to the target size
+        assert np.array_equal(np.concatenate(parts), np.arange(16))
+
+
+class TestHeterogeneousEndToEnd:
+    """Acceptance: a directory of heterogeneous-length wav files
+    round-trips scan_dataset -> job(...).source(root) -> store,
+    including mid-job resume, sync and pipelined."""
+
+    FEATS = ("welch", "spl", "tol")
+
+    def _oneshot(self, m, root):
+        return (api.job(m, P).features(*self.FEATS).chunk(4)
+                .source(str(root)).run())
+
+    def test_scan_to_store_with_resume(self, tmp_path):
+        data, out = tmp_path / "wavs", tmp_path / "store"
+        write_dataset(str(data), het_manifest())
+        m = scan_dataset(str(data), P.record_size)
+
+        crashed = (api.job(m, P).features(*self.FEATS).chunk(4)
+                   .source(str(data)).to(str(out)).limit(1).run())
+        assert FeatureStore(str(out)).committed_steps(
+            crashed.plan) == 1
+        resumed = (api.job(m, P).features(*self.FEATS).chunk(4)
+                   .source(str(data)).to(str(out)).run())
+        oneshot = self._oneshot(m, data)
+        for name in self.FEATS:
+            assert np.array_equal(np.asarray(resumed[name]),
+                                  oneshot[name]), name
+        assert np.array_equal(resumed["mean_welch"], oneshot["mean_welch"])
+        assert resumed.n_records == m.n_records == sum(COUNTS)
+
+    def test_pipelined_path_bitwise_equal(self, tmp_path):
+        data = tmp_path / "wavs"
+        write_dataset(str(data), het_manifest())
+        m = scan_dataset(str(data), P.record_size)
+        sync = self._oneshot(m, data)
+        asyn = (api.job(m, P).features(*self.FEATS).chunk(4)
+                .source(str(data)).async_io(depth=2).run())
+        for name in self.FEATS:
+            assert np.array_equal(sync[name], asyn[name]), name
+
+    def test_per_record_source_matches_coalesced(self, tmp_path):
+        data = tmp_path / "wavs"
+        write_dataset(str(data), het_manifest())
+        m = scan_dataset(str(data), P.record_size)
+        fast = self._oneshot(m, data)
+        slow = (api.job(m, P).features(*self.FEATS).chunk(4)
+                .source(api.WavSource(str(data), coalesced=False)).run())
+        for name in self.FEATS:
+            assert np.array_equal(fast[name], slow[name]), name
+
+    def test_source_handles_released_after_run(self, tmp_path):
+        """The engine closes the source, so no wav handle outlives the
+        job — and a closed source re-binds cleanly for the next run."""
+        data = tmp_path / "wavs"
+        write_dataset(str(data), het_manifest())
+        m = scan_dataset(str(data), P.record_size)
+        src = api.WavSource(str(data))
+        first = (api.job(m, P).features(*self.FEATS).chunk(4)
+                 .source(src).run())
+        cache = src._reader._cache
+        assert sum(len(v) for v in cache._idle.values()) == 0
+        again = (api.job(m, P).features(*self.FEATS).chunk(4)
+                 .source(src).run())
+        for name in self.FEATS:
+            assert np.array_equal(first[name], again[name]), name
