@@ -1,12 +1,44 @@
 """Benchmark aggregator — one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV.
+Prints ``name,us_per_call,derived`` CSV and writes the consolidated
+perf-trajectory snapshot ``BENCH_PR4.json`` at the repo root: one entry
+per benchmark with µs/call plus every derived metric (records/s,
+host→device bytes/record, file opens/step, speedups...), so future PRs
+can diff against a recorded baseline instead of re-deriving one.
+Snapshots are keyed by config (``fast`` vs ``full``) and merged into
+the existing file, so a ``--fast`` dev run never clobbers full-config
+baseline numbers with non-comparable ones.
 
   PYTHONPATH=src python -m benchmarks.run [--fast]
 """
 from __future__ import annotations
 
+import json
+import os
 import sys
+
+
+def parse_rows(rows: list[str]) -> dict:
+    """``name,us_per_call,derived`` rows -> {name: {metric: value}}.
+
+    Derived fields are ``k=v`` pairs joined by ``;``; numeric values
+    (including ``1.9x`` ratios) are parsed to floats, the rest kept as
+    strings.  The header row is skipped.
+    """
+    out: dict[str, dict] = {}
+    for row in rows:
+        name, us, derived = row.split(",", 2)
+        if name == "name":
+            continue
+        entry: dict = {"us_per_call": float(us)}
+        for pair in filter(None, derived.split(";")):
+            k, _, v = pair.partition("=")
+            try:
+                entry[k] = float(v[:-1] if v.endswith("x") else v)
+            except ValueError:
+                entry[k] = v
+        out[name] = entry
+    return out
 
 
 def main() -> None:
@@ -15,7 +47,7 @@ def main() -> None:
 
     from benchmarks import async_pipeline, fig3_1_single_node, \
         fig3_2_speedup, job_pipeline, table2_1_param_sets, \
-        roofline_report, wav_io
+        roofline_report, transfer, wav_io
 
     rows += fig3_1_single_node.run(
         workload_records=(4, 8) if fast else (4, 8, 16))
@@ -28,9 +60,29 @@ def main() -> None:
     rows += wav_io.run(file_records=(6, 10, 4, 8) if fast
                        else (24, 40, 16, 32, 8, 48),
                        iters=2 if fast else 3)
+    rows += transfer.run(file_records=(6, 10, 4) if fast
+                         else (24, 40, 16, 32),
+                         record_sec=0.25 if fast else 0.5,
+                         iters=1 if fast else 2)
     rows += roofline_report.run()
 
     print("\n".join(rows))
+
+    out_path = os.path.abspath(os.path.join(
+        os.path.dirname(__file__), os.pardir, "BENCH_PR4.json"))
+    snapshot: dict = {}
+    if os.path.exists(out_path):
+        try:
+            with open(out_path) as f:
+                snapshot = json.load(f)
+        except (OSError, ValueError):
+            snapshot = {}
+    mode = "fast" if fast else "full"
+    snapshot[mode] = {"benchmarks": parse_rows(rows)}
+    with open(out_path, "w") as f:
+        json.dump(snapshot, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {out_path} ({mode} config)")
 
 
 if __name__ == "__main__":

@@ -20,6 +20,10 @@ the pipelined executor — host reads prefetched through the speculative
 loader (:class:`PrefetchSource`), the epoch aggregate carried on-device,
 up to ``inflight`` device steps dispatched ahead, and sink IO on an
 :class:`AsyncSink` background writer — with bitwise-identical results.
+``.payload("int16")`` additionally switches wav-fed jobs to raw-PCM
+transport: half the host→device bytes, calibration as a per-record
+decode-scale sidecar, dequantization inside the Pallas kernels — again
+bitwise-identical to the float32 path.
 
 The fluent builder ties them together::
 

@@ -29,7 +29,11 @@ host readers, devices, and the sink writer — instead of a serial chain:
   * host-fed payloads arrive through ``Source.stream`` — which a
     :class:`~repro.api.sources.PrefetchSource` overlaps with compute via
     the SpeculativeLoader thread pool — and their device buffers are
-    DONATED to the step so XLA can reuse/free them immediately;
+    DONATED to the step so XLA can reuse/free them immediately; on the
+    int16 transport path (``Source.payload_dtype == "int16"``) the
+    payload ships as raw PCM (half the host→device bytes) plus a
+    per-record decode-scale sidecar, and the Pallas kernels dequantize
+    in VMEM — bitwise-identical to the float32 path;
   * an :class:`~repro.api.sinks.AsyncSink` (applied by the job builder)
     moves sink IO onto a background writer with the same ordering.
 
@@ -94,14 +98,18 @@ class ExecOptions:
 def compile_step(specs: tuple[FeatureSpec, ...], m: DatasetManifest,
                  p: DepamParams, mesh: Mesh | None,
                  data_axes: tuple[str, ...], use_kernels: bool,
-                 device_synth: bool, donate: bool = False) -> Callable:
+                 device_synth: bool, donate: bool = False,
+                 payload_dtype: str = "float32") -> Callable:
     """Build the single jitted per-chunk step for all selected features.
 
-    Takes (payload, mask) where payload is int32 indices (device synth)
-    or float32 waveforms (host-fed), both with (n_shards, chunk) leading
-    layout; returns {feature: (n_shards, chunk, *shape)} with padding
-    slots overwritten by each spec's fill value.  ``donate`` hands the
-    payload buffer to XLA (host-fed waveforms are the big one).
+    Takes (payload, mask) — or (payload, scales, mask) on the int16
+    transport path — where payload is int32 indices (device synth),
+    float32 waveforms, or raw ``<i2`` PCM, all with (n_shards, chunk)
+    leading layout; ``scales`` is the per-record float32 decode-scale
+    sidecar the kernels dequantize with in VMEM.  Returns
+    {feature: (n_shards, chunk, *shape)} with padding slots overwritten
+    by each spec's fill value.  ``donate`` hands the payload buffer to
+    XLA (host-fed waveforms are the big one).
 
     Cached on the full configuration (specs are frozen dataclasses), so
     repeated jobs with the same setup reuse one compiled program instead
@@ -109,6 +117,17 @@ def compile_step(specs: tuple[FeatureSpec, ...], m: DatasetManifest,
     """
     consts = {s.name: {k: jnp.asarray(v) for k, v in s.setup(m, p).items()}
               for s in specs if s.setup is not None}
+    raw = payload_dtype == "int16" and not device_synth
+
+    def features_out(ctx, lead, mask):
+        out = {}
+        for s in specs:
+            val = s.compute(ctx)
+            val = val.reshape(lead + val.shape[1:])
+            fmask = mask.reshape(lead + (1,) * (val.ndim - len(lead)))
+            out[s.name] = jnp.where(fmask, val,
+                                    jnp.asarray(s.fill, val.dtype))
+        return out
 
     def local_step(payload, mask):
         if device_synth:
@@ -120,21 +139,23 @@ def compile_step(specs: tuple[FeatureSpec, ...], m: DatasetManifest,
         lead = records.shape[:-1]
         ctx = FeatureContext(records.reshape(-1, records.shape[-1]), p,
                              use_kernels, consts)
-        out = {}
-        for s in specs:
-            val = s.compute(ctx)
-            val = val.reshape(lead + val.shape[1:])
-            fmask = mask.reshape(lead + (1,) * (val.ndim - len(lead)))
-            out[s.name] = jnp.where(fmask, val,
-                                    jnp.asarray(s.fill, val.dtype))
-        return out
+        return features_out(ctx, lead, mask)
 
+    def local_step_raw(payload, scales, mask):
+        lead = payload.shape[:-1]
+        ctx = FeatureContext(payload.reshape(-1, payload.shape[-1]), p,
+                             use_kernels, consts,
+                             scales=scales.reshape(-1))
+        return features_out(ctx, lead, mask)
+
+    fn = local_step_raw if raw else local_step
     kw = {"donate_argnums": (0,)} if donate else {}
     if mesh is None:
-        return jax.jit(local_step, **kw)
+        return jax.jit(fn, **kw)
 
     shard = NamedSharding(mesh, P(data_axes))
-    return jax.jit(local_step, in_shardings=(shard, shard),
+    in_shardings = (shard, shard, shard) if raw else (shard, shard)
+    return jax.jit(fn, in_shardings=in_shardings,
                    out_shardings=shard, **kw)
 
 
@@ -216,11 +237,12 @@ def run_job(m: DatasetManifest, p: DepamParams, specs: list[FeatureSpec],
     source = source.bind(m, p)
     shapes = {s.name: tuple(s.shape(m, p)) for s in specs}
 
+    raw = not source.device_synth and source.payload_dtype == "int16"
     donate_payload = options.donate and not source.device_synth
     donate_carry = options.donate and not sink.wants_commit
     step_fn = compile_step(tuple(specs), m, p, mesh, data_axes,
                            use_kernels, source.device_synth,
-                           donate_payload)
+                           donate_payload, source.payload_dtype)
     agg_fn = compile_agg_update(tuple(specs), mesh, data_axes,
                                 donate_carry)
 
@@ -257,12 +279,25 @@ def run_job(m: DatasetManifest, p: DepamParams, specs: list[FeatureSpec],
         for step in range(start_step, n_steps):
             idx = pl_.step_indices(step)
             mask = pl_.step_mask(step)
+            dmask = jnp.asarray(mask)
             if source.device_synth:
-                payload = jnp.asarray(idx, jnp.int32)
+                out = step_fn(jnp.asarray(idx, jnp.int32), dmask)
+            elif raw:
+                # raw-PCM transport: ship the int16 bytes as-is (half
+                # the bus traffic, still donated) + the tiny per-record
+                # decode-scale sidecar; kernels dequantize in VMEM
+                payload = jnp.asarray(next(stream))
+                if payload.dtype != jnp.int16:
+                    raise TypeError(
+                        f"int16 payload path got {payload.dtype} from "
+                        f"{type(source).__name__}.stream — the source's "
+                        f"payload_dtype promises raw '<i2' PCM")
+                out = step_fn(payload,
+                              jnp.asarray(source.scales(idx), jnp.float32),
+                              dmask)
             else:
                 payload = jnp.asarray(next(stream), jnp.float32)
-            dmask = jnp.asarray(mask)
-            out = step_fn(payload, dmask)
+                out = step_fn(payload, dmask)
             agg_state = agg_fn(agg_state, out, dmask)
             # start the device→host transfers now; block in drain_one
             for v in out.values():

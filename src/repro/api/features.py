@@ -39,39 +39,71 @@ from repro.kernels import ops
 class FeatureContext:
     """Shared per-trace state handed to every ``FeatureSpec.compute``.
 
-    ``records`` is the flat ``(batch, record_size)`` waveform batch on one
-    device.  Expensive intermediates (Welch PSD, per-frame PSD) are
-    computed lazily and cached, so N features selecting the same
-    intermediate trace it exactly once.
+    ``records`` is the flat ``(batch, record_size)`` float32 waveform
+    batch on one device.  Expensive intermediates (Welch PSD, per-frame
+    PSD) are computed lazily and cached, so N features selecting the
+    same intermediate trace it exactly once.
+
+    With the int16 payload transport the context is constructed from the
+    raw ``(batch, record_size)`` PCM plus the per-record decode-scale
+    sidecar (``scales``).  The PSD intermediates then hand the PCM
+    straight to the Pallas kernels, which dequantize in VMEM — the
+    float32 waveform never exists in HBM.  ``ctx.records`` stays
+    available for features that need the waveform itself: it
+    dequantizes lazily (bitwise-equal to the host decode) and only
+    features that touch it pay for the materialization.
     """
 
     def __init__(self, records: jnp.ndarray, params: DepamParams,
-                 use_kernels: bool, consts: dict[str, dict]):
-        self.records = records
+                 use_kernels: bool, consts: dict[str, dict],
+                 scales: jnp.ndarray | None = None):
+        self.quantized = records.dtype == jnp.int16
+        self.pcm = records if self.quantized else None
+        self.scales = scales
         self.params = params
         self.use_kernels = use_kernels
         self._consts = consts
         self._cache: dict[str, jnp.ndarray] = {}
+        if not self.quantized:
+            self._cache["records"] = records
 
     def const(self, feature: str, name: str) -> jnp.ndarray:
         """A host-side constant declared by ``FeatureSpec.setup``."""
         return self._consts[feature][name]
 
     @property
+    def records(self) -> jnp.ndarray:
+        """(batch, record_size) float32 waveforms (lazy dequantize)."""
+        if "records" not in self._cache:
+            from repro.kernels.common import dequantize
+            self._cache["records"] = dequantize(self.pcm, self.scales)
+        return self._cache["records"]
+
+    def _psd(self, key: str, kernel_fn, xla_fn) -> jnp.ndarray:
+        """Shared dispatch for the cached PSD intermediates: the Pallas
+        entry points take raw PCM + the scales sidecar directly (dequant
+        happens in VMEM); the XLA fallback gets the (lazily
+        dequantized) float32 records."""
+        if key not in self._cache:
+            if self.use_kernels:
+                src = self.pcm if self.quantized else self.records
+                out = kernel_fn(src, self.params,
+                                scales=self.scales
+                                if self.quantized else None)
+            else:
+                out = xla_fn(self.records, self.params)
+            self._cache[key] = out
+        return self._cache[key]
+
+    @property
     def welch(self) -> jnp.ndarray:
         """(batch, n_bins) Welch PSD, Pallas kernel or XLA path."""
-        if "welch" not in self._cache:
-            fn = ops.welch_psd if self.use_kernels else spectra.welch_psd
-            self._cache["welch"] = fn(self.records, self.params)
-        return self._cache["welch"]
+        return self._psd("welch", ops.welch_psd, spectra.welch_psd)
 
     @property
     def frame_psd(self) -> jnp.ndarray:
         """(batch, n_frames, n_bins) per-frame PSD (the spectrogram)."""
-        if "frame_psd" not in self._cache:
-            fn = ops.frame_psd if self.use_kernels else spectra.frame_psd
-            self._cache["frame_psd"] = fn(self.records, self.params)
-        return self._cache["frame_psd"]
+        return self._psd("frame_psd", ops.frame_psd, spectra.frame_psd)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -11,6 +11,7 @@
                  .to("/tmp/depam")    # optional: default in-memory
                  .chunk(8)
                  .async_io(depth=2)   # optional: pipelined executor
+                 .payload("int16")    # optional: raw-PCM transport
                  .run())
 
 Every setter returns the job, so configurations read as one expression;
@@ -70,6 +71,7 @@ class SoundscapeJob:
         self._chunk = 8
         self._use_kernels = True
         self._max_steps: int | None = None
+        self._payload_dtype: str | None = None
         self._exec = engine.ExecOptions()
 
     def features(self, *feats: str | FeatureSpec) -> "SoundscapeJob":
@@ -106,6 +108,23 @@ class SoundscapeJob:
     def kernels(self, enabled: bool) -> "SoundscapeJob":
         """Toggle the Pallas kernel path (True) vs XLA fallback."""
         self._use_kernels = bool(enabled)
+        return self
+
+    def payload(self, dtype: str) -> "SoundscapeJob":
+        """Host→device payload transport dtype for host-fed sources.
+
+        ``"int16"`` ships raw PCM straight from the reader — half the
+        bus bytes, no host-side decode pass — with calibration riding a
+        per-record float32 decode-scale sidecar; the kernels dequantize
+        in VMEM.  Results are bitwise-identical to ``"float32"`` (the
+        default decoded-waveform transport); ``benchmarks/transfer.py``
+        asserts both the identity and the byte reduction.
+        """
+        if dtype not in ("float32", "int16"):
+            raise ValueError(
+                f"payload dtype must be 'float32' or 'int16', "
+                f"got {dtype!r}")
+        self._payload_dtype = dtype
         return self
 
     def limit(self, max_steps: int | None) -> "SoundscapeJob":
@@ -150,6 +169,8 @@ class SoundscapeJob:
     def run(self) -> JobResult:
         specs = resolve_features(self._features)
         source: Source = as_source(self._source)
+        if self._payload_dtype is not None:
+            source = source.with_payload(self._payload_dtype)
         if self._exec.prefetch_depth > 0 and not source.device_synth \
                 and not isinstance(source, PrefetchSource):
             source = PrefetchSource(source, depth=self._exec.prefetch_depth)

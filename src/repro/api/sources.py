@@ -18,12 +18,22 @@ implementation fetches inline (the synchronous path);
 proceed on a host thread pool (with over-decomposition and speculative
 re-execution of stragglers) while the devices compute step k.
 
+Host-fed sources carry a **payload dtype**: ``"float32"`` (decoded
+waveforms, the default) or ``"int16"`` (raw PCM transport — half the
+host→device bytes, no host-side decode pass; the per-record float32
+decode-scale sidecar from :meth:`Source.scales` rides along and the
+Pallas kernels dequantize in VMEM, bitwise-identically).
+``SoundscapeJob.payload("int16")`` flips it via :meth:`with_payload`;
+:class:`PrefetchSource` transparently preserves whatever the wrapped
+source ships.
+
 ``as_source`` normalizes what users pass to ``SoundscapeJob.source()``:
 ``None`` -> synthesis, a callable -> ``ReaderSource``, a path string ->
 ``WavSource``, a ``Source`` -> itself.
 """
 from __future__ import annotations
 
+import copy
 from typing import Callable, Iterator
 
 import jax
@@ -31,7 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.manifest import DatasetManifest, ShardPlan
-from repro.core.params import DepamParams
+from repro.core.params import DepamParams, PCM_DECODE_SCALE
 
 
 def synth_record(idx: jnp.ndarray, m: DatasetManifest) -> jnp.ndarray:
@@ -60,14 +70,28 @@ class Source:
     implement ``fetch``."""
 
     device_synth: bool = False
+    payload_dtype: str = "float32"
 
     def bind(self, m: DatasetManifest, p: DepamParams) -> "Source":
         """Late-bind the manifest/params at job start; returns self."""
         return self
 
+    def with_payload(self, dtype: str) -> "Source":
+        """Request a payload transport dtype (``"float32"``/``"int16"``).
+
+        Sources that can ship raw PCM override this; the base accepts
+        only the dtype the source already produces."""
+        if dtype == self.payload_dtype:
+            return self
+        raise ValueError(
+            f"{type(self).__name__} cannot ship {dtype!r} payloads "
+            f"(it produces {self.payload_dtype!r}; device-synthesized "
+            f"sources ship int32 indices and have no host payload)")
+
     def fetch(self, indices: np.ndarray) -> np.ndarray:
-        """Global record indices -> float32 waveforms of shape
-        ``indices.shape + (record_size,)`` (zeros for padding slots).
+        """Global record indices -> waveforms of shape
+        ``indices.shape + (record_size,)`` (zeros for padding slots), in
+        ``payload_dtype`` (float32 decoded, or raw ``<i2`` PCM).
 
         The synchronous engine passes ``(n_shards, chunk)`` arrays, but
         implementations must NOT rely on that: the pipelined path
@@ -78,6 +102,15 @@ class Source:
         lineage property that also makes speculative duplicate reads
         and crash recomputation sound)."""
         raise NotImplementedError
+
+    def scales(self, indices: np.ndarray) -> np.ndarray:
+        """Per-record float32 decode-scale sidecar for int16 payloads:
+        PCM full-scale x calibration gain, fused on the host (see
+        ``data.wavio``).  Pure index arithmetic — no IO, ~4 bytes per
+        record next to the 2-byte-per-sample payload.  The default is
+        the plain full-scale factor (no calibration)."""
+        return np.full(np.asarray(indices).shape, PCM_DECODE_SCALE,
+                       np.float32)
 
     def stream(self, plan: ShardPlan, start: int,
                stop: int) -> Iterator[np.ndarray]:
@@ -107,13 +140,66 @@ class ReaderSource(Source):
     """Any host callback ``indices -> waveforms`` (e.g. WavRecordReader,
     a SpeculativeLoader-backed reader, or a live-stream shim).  The
     callback inherits :meth:`Source.fetch`'s contract: any index shape,
-    pure per record, thread-safe under ``async_io``."""
+    pure per record, thread-safe under ``async_io``.
 
-    def __init__(self, reader: Callable[[np.ndarray], np.ndarray]):
+    ``payload_dtype="int16"`` declares that the callback returns raw
+    ``<i2`` PCM; ``scales`` may then supply the per-record decode-scale
+    sidecar (``indices -> float32``).  When the callback itself exposes
+    ``scales_for`` (both wav readers in ``raw=True`` mode do), that is
+    used automatically — a calibrated raw reader keeps its calibration
+    without extra wiring.  The fallback is the plain full-scale decode.
+    A float-returning callback on the int16 path is an error — silent
+    requantization would corrupt the data, never do it implicitly.
+    """
+
+    def __init__(self, reader: Callable[[np.ndarray], np.ndarray],
+                 payload_dtype: str = "float32",
+                 scales: Callable[[np.ndarray], np.ndarray] | None = None):
         self.reader = reader
+        self.payload_dtype = payload_dtype
+        self._scales = scales
+
+    def with_payload(self, dtype: str) -> "ReaderSource":
+        if dtype == self.payload_dtype:
+            return self
+        if self.payload_dtype == "int16":
+            # the callback itself produces raw PCM; unlike WavSource we
+            # cannot re-bind it into decode mode, and casting PCM to
+            # float32 without the decode scale would be silently 32767x
+            # off — refuse instead
+            raise ValueError(
+                f"{type(self).__name__} wraps a raw-int16 reader and "
+                f"cannot ship {dtype!r} payloads; wrap a decoding "
+                f"reader instead (e.g. a raw=False wav reader)")
+        new = copy.copy(self)
+        new.payload_dtype = dtype
+        return new
 
     def fetch(self, indices: np.ndarray) -> np.ndarray:
-        return np.asarray(self.reader(indices), np.float32)
+        out = np.asarray(self.reader(indices))
+        want = np.int16 if self.payload_dtype == "int16" else np.float32
+        if out.dtype == want:      # hot path: no conversion, no copy
+            return out
+        if want == np.int16:
+            raise TypeError(
+                f"reader returned {out.dtype} but the source ships raw "
+                f"int16 PCM; requantizing floats would corrupt the data "
+                f"— return '<i2' arrays (e.g. a raw=True wav reader)")
+        if out.dtype == np.int16:
+            raise TypeError(
+                "reader returned raw int16 PCM on the float32 payload "
+                "path; casting it would skip the decode scale (32767x "
+                "amplitude error) — declare payload_dtype='int16' (or "
+                ".payload('int16') on the job) to ship PCM, or have the "
+                "reader decode to float32")
+        return out.astype(np.float32)
+
+    def scales(self, indices: np.ndarray) -> np.ndarray:
+        if self._scales is not None:
+            return np.asarray(self._scales(indices), np.float32)
+        if hasattr(self.reader, "scales_for"):
+            return np.asarray(self.reader.scales_for(indices), np.float32)
+        return super().scales(indices)
 
 
 class WavSource(Source):
@@ -128,30 +214,56 @@ class WavSource(Source):
     (``coalesced=False``, the debugging oracle).  ``calibration``
     applies a pypam-style per-file sensitivity gain; ``max_open_files``
     bounds the handle cache.
+
+    ``payload_dtype="int16"`` (or ``.payload("int16")`` on the job)
+    switches to raw-PCM transport: the readers return ``<i2`` straight
+    from ``readframes`` — no host decode pass at all — and the
+    calibration rides the :meth:`scales` sidecar instead of a
+    full-array multiply.
     """
 
     def __init__(self, root: str, coalesced: bool = True,
-                 max_open_files: int = 8, calibration=None):
+                 max_open_files: int = 8, calibration=None,
+                 payload_dtype: str = "float32"):
         self.root = root
         self.coalesced = coalesced
         self.max_open_files = max_open_files
         self.calibration = calibration
-        self._reader: Callable | None = None
+        self.payload_dtype = payload_dtype
+        self._reader = None
+
+    def with_payload(self, dtype: str) -> "WavSource":
+        if dtype == self.payload_dtype:
+            return self
+        # copy, don't mutate: a source reused across jobs must not
+        # inherit another job's transport setting
+        new = copy.copy(self)
+        new.payload_dtype = dtype
+        new._reader = None          # bind() attaches the right-mode reader
+        return new
 
     def bind(self, m: DatasetManifest, p: DepamParams) -> "WavSource":
         from repro.data.wavio import BlockReader, WavRecordReader
+        raw = self.payload_dtype == "int16"
         if self.coalesced:
             self._reader = BlockReader(
                 self.root, m, max_open_files=self.max_open_files,
-                calibration=self.calibration)
+                calibration=self.calibration, raw=raw)
         else:
             self._reader = WavRecordReader(
-                self.root, m, calibration=self.calibration)
+                self.root, m, calibration=self.calibration, raw=raw)
         return self
 
     def fetch(self, indices: np.ndarray) -> np.ndarray:
         assert self._reader is not None, "WavSource used before bind()"
-        return np.asarray(self._reader(indices), np.float32)
+        out = self._reader(indices)
+        # readers already return the requested dtype — no copy
+        return out if out.dtype == self._reader.dtype \
+            else np.asarray(out, self._reader.dtype)
+
+    def scales(self, indices: np.ndarray) -> np.ndarray:
+        assert self._reader is not None, "WavSource used before bind()"
+        return self._reader.scales_for(indices)
 
     def close(self) -> None:
         if self._reader is not None and hasattr(self._reader, "close"):
@@ -192,6 +304,19 @@ class PrefetchSource(Source):
         self.last_stats: dict | None = None
         self._manifest: DatasetManifest | None = None
 
+    @property
+    def payload_dtype(self) -> str:
+        """Prefetching never changes the bytes — the wrapped source's
+        transport dtype (and its decode-scale sidecar) pass through."""
+        return self.inner.payload_dtype
+
+    def with_payload(self, dtype: str) -> "PrefetchSource":
+        if dtype == self.payload_dtype:
+            return self
+        new = copy.copy(self)
+        new.inner = self.inner.with_payload(dtype)
+        return new
+
     def bind(self, m: DatasetManifest, p: DepamParams) -> "PrefetchSource":
         self.inner = self.inner.bind(m, p)
         self._manifest = m
@@ -199,6 +324,9 @@ class PrefetchSource(Source):
 
     def fetch(self, indices: np.ndarray) -> np.ndarray:
         return self.inner.fetch(indices)
+
+    def scales(self, indices: np.ndarray) -> np.ndarray:
+        return self.inner.scales(indices)
 
     def close(self) -> None:
         self.inner.close()

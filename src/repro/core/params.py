@@ -13,6 +13,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Literal
 
+import numpy as np
+
 
 @dataclasses.dataclass(frozen=True)
 class DepamParams:
@@ -64,6 +66,16 @@ PARAM_SET_1 = DepamParams(nfft=256, window_size=256, window_overlap=128,
                           record_size_sec=60.0)
 PARAM_SET_2 = DepamParams(nfft=4096, window_size=4096, window_overlap=0,
                           record_size_sec=10.0)
+
+# int16 PCM decode factor.  Dequantization is ONE float32 multiply per
+# sample by a per-record scale of PCM_DECODE_SCALE * calibration_gain,
+# with the product fused in float32 on the host (data/wavio) so the
+# device kernels and the host decode perform the exact same single
+# rounding — that is what keeps the int16 payload path bitwise-identical
+# to the float32 path.  A divide here (the obvious /32767.0) is NOT
+# equivalent: XLA rewrites division-by-constant into multiplication by
+# the rounded reciprocal, which diverges from a host-side divide.
+PCM_DECODE_SCALE = np.float32(1.0) / np.float32(32767.0)
 
 # Dataset constants from the paper (St-Pierre-et-Miquelon 2010 deployment).
 PAPER_FS = 32768.0

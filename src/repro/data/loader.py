@@ -17,6 +17,11 @@ two answers at that layer:
 Prefetch depth ``depth`` overlaps host IO with device compute — the
 compute/communication-overlap trick applied at the data layer.
 
+The loader is payload-dtype agnostic: task results are concatenated and
+reshaped as-is, so a reader returning raw ``<i2`` PCM (the int16
+transport path) streams through byte-for-byte — over-decomposition and
+speculation never force a float conversion or an extra copy.
+
 Threading note: orchestration (step assembly, speculation timers) runs on a
 dedicated pool, actual reads on another.  A single shared pool would
 self-deadlock — wrappers would occupy every worker while waiting on read
@@ -138,6 +143,7 @@ class SpeculativeLoader:
                             break
                         if not waiting:     # every copy failed
                             next(iter(done)).result()   # re-raise
+        # dtype passes through untouched (int16 payloads stay int16)
         out = np.concatenate([results[i] for i in range(len(parts))], axis=0)
         return out.reshape(*idx.shape, -1), self.plan.step_mask(step)
 

@@ -15,8 +15,18 @@ seeks.  This module provides both ends of that spectrum:
     the per-record reader; only the number of opens/seeks changes.
 
 Both readers accept a pypam-style per-file **calibration gain**
-(hydrophone sensitivity): a scalar or one factor per file, multiplied
-into the decoded float32 waveform.
+(hydrophone sensitivity).  Decode is ONE float32 multiply per sample:
+the 1/32767 PCM full-scale factor and the gain are fused on the host
+into a per-file ``scale`` (float32, single rounding), so calibration
+costs no extra pass over the samples.
+
+Both readers also support **raw payload transport** (``raw=True``):
+``fetch`` returns the ``<i2`` PCM exactly as read from disk — no float
+conversion, half the bytes — and ``scales_for(indices)`` returns the
+per-record float32 decode-scale *sidecar* vector instead.  Applying
+``pcm.astype(float32) * scale`` (one multiply, anywhere — host or
+inside a device kernel) reproduces the float path bitwise; that is the
+contract the int16 host→device transport path is built on.
 
 ``scan_dataset(root)`` builds a :class:`DatasetManifest` from the real
 wav headers in a directory — heterogeneous file lengths and arbitrary
@@ -33,6 +43,7 @@ import wave
 import numpy as np
 
 from repro.core.manifest import DatasetManifest
+from repro.core.params import PCM_DECODE_SCALE
 
 
 def write_dataset(root: str, m: DatasetManifest, gen=None) -> list[str]:
@@ -107,6 +118,39 @@ def _calibration_gains(m: DatasetManifest, calibration) -> np.ndarray | None:
     return g
 
 
+def _file_scales(m: DatasetManifest, calibration) -> np.ndarray:
+    """Per-file float32 decode scales: PCM_DECODE_SCALE * gain, fused.
+
+    One rounding happens here, once per file; every decode afterwards is
+    a single multiply by this value — the same multiply the Pallas
+    kernels perform on raw int16 payloads, which is why the two
+    transports agree bitwise.
+    """
+    g = _calibration_gains(m, calibration)
+    if g is None:
+        return np.full(m.n_files, PCM_DECODE_SCALE, np.float32)
+    return PCM_DECODE_SCALE * g
+
+
+def sidecar_scales(m: DatasetManifest, scales: np.ndarray,
+                   indices) -> np.ndarray:
+    """Per-record decode-scale sidecar for a batch of global indices.
+
+    Pure manifest arithmetic (a searchsorted over file offsets) — no IO,
+    a few bytes per record next to the 2-byte-per-sample payload.
+    Padding/invalid slots get the plain full-scale factor; their PCM is
+    zero, so any finite scale decodes them to 0.0 like the float path.
+    """
+    idx = np.asarray(indices)
+    out = np.full(idx.shape, PCM_DECODE_SCALE, np.float32)
+    flat = idx.reshape(-1)
+    valid = (flat >= 0) & (flat < m.n_records)
+    if valid.any():
+        fi, _ = m.locate_many(flat[valid])
+        out.reshape(-1)[valid] = scales[fi]
+    return out
+
+
 class _HandleCache:
     """Bounded thread-safe LRU of open ``wave`` readers.
 
@@ -155,9 +199,9 @@ class _HandleCache:
                 h.close()
 
 
-def _decode(raw: bytes, want_frames: int, path: str,
-            at_record: int) -> np.ndarray:
-    """int16 bytes -> float32 in [-1, 1], validating the frame count.
+def _decode_pcm(raw: bytes, want_frames: int, path: str,
+                at_record: int) -> np.ndarray:
+    """int16 bytes -> ``<i2`` array, validating the frame count.
 
     ``readframes`` silently returns short at EOF; with variable-length
     files that would mean silently analyzing a zero-padded tail, so a
@@ -169,21 +213,27 @@ def _decode(raw: bytes, want_frames: int, path: str,
             f"truncated read from {path!r}: wanted {want_frames} frames "
             f"starting at record {at_record}, got {pcm.size} — the file "
             f"is shorter than the manifest says (re-run scan_dataset?)")
-    return pcm.astype(np.float32) / 32767.0
+    return pcm
 
 
 class WavRecordReader:
-    """reader(indices (s, c)) -> waveforms (s, c, record_size) float32.
+    """reader(indices (s, c)) -> waveforms (s, c, record_size).
 
     One open + seek + read per record — the bitwise oracle the coalesced
     :class:`BlockReader` is tested against.  ``file_opens`` counts opens
     so the coalescing win is assertable, not just believed.
+
+    ``raw=True`` skips the float conversion: payloads come back as
+    ``<i2`` PCM and :meth:`scales_for` supplies the decode-scale sidecar.
     """
 
-    def __init__(self, root: str, m: DatasetManifest, calibration=None):
+    def __init__(self, root: str, m: DatasetManifest, calibration=None,
+                 raw: bool = False):
         self.root = root
         self.m = m
-        self.gains = _calibration_gains(m, calibration)
+        self.raw = raw
+        self.scales = _file_scales(m, calibration)
+        self.dtype = np.dtype("<i2") if raw else np.dtype(np.float32)
         self.file_opens = 0
 
     def read_one(self, idx: int) -> np.ndarray:
@@ -193,14 +243,18 @@ class WavRecordReader:
         with wave.open(path, "rb") as w:
             w.setpos(ri * self.m.record_size)
             raw = w.readframes(self.m.record_size)
-        out = _decode(raw, self.m.record_size, path, ri)
-        if self.gains is not None:
-            out = out * self.gains[fi]
-        return out
+        pcm = _decode_pcm(raw, self.m.record_size, path, ri)
+        if self.raw:
+            return pcm
+        return pcm.astype(np.float32) * self.scales[fi]
+
+    def scales_for(self, indices) -> np.ndarray:
+        """Per-record float32 decode-scale sidecar (see module doc)."""
+        return sidecar_scales(self.m, self.scales, indices)
 
     def __call__(self, indices: np.ndarray) -> np.ndarray:
         flat = [self.read_one(i) if 0 <= i < self.m.n_records
-                else np.zeros(self.m.record_size, np.float32)
+                else np.zeros(self.m.record_size, self.dtype)
                 for i in indices.reshape(-1)]
         return np.stack(flat).reshape(*indices.shape, self.m.record_size)
 
@@ -215,13 +269,20 @@ class BlockReader:
     inside one file is ONE read), and keeps up to ``max_open_files``
     wav handles open across calls.  Thread-safe: ``PrefetchSource``
     over-decomposes steps and fetches sub-slices concurrently.
+
+    ``raw=True`` returns ``<i2`` PCM with no float pass at all — the
+    payload bytes go straight from ``readframes`` into the batch array —
+    and :meth:`scales_for` supplies the decode-scale sidecar.
     """
 
     def __init__(self, root: str, m: DatasetManifest,
-                 max_open_files: int = 8, calibration=None):
+                 max_open_files: int = 8, calibration=None,
+                 raw: bool = False):
         self.root = root
         self.m = m
-        self.gains = _calibration_gains(m, calibration)
+        self.raw = raw
+        self.scales = _file_scales(m, calibration)
+        self.dtype = np.dtype("<i2") if raw else np.dtype(np.float32)
         self._cache = _HandleCache(max_open_files)
         self._stat_lock = threading.Lock()
         self.reads = 0                    # readframes calls (coalesced)
@@ -233,7 +294,7 @@ class BlockReader:
 
     def _read_run(self, fi: int, r0: int, n: int) -> np.ndarray:
         """Read ``n`` contiguous records of file ``fi`` from record
-        ``r0`` — one seek + one readframes."""
+        ``r0`` — one seek + one readframes; returns ``<i2`` PCM."""
         rs = self.m.record_size
         path = os.path.join(self.root, self.m.file_name(fi))
         h = self._cache.checkout(fi, path)
@@ -242,13 +303,17 @@ class BlockReader:
             raw = h.readframes(n * rs)
         finally:
             self._cache.checkin(fi, h)
-        return _decode(raw, n * rs, path, r0)
+        return _decode_pcm(raw, n * rs, path, r0)
+
+    def scales_for(self, indices) -> np.ndarray:
+        """Per-record float32 decode-scale sidecar (see module doc)."""
+        return sidecar_scales(self.m, self.scales, indices)
 
     def fetch(self, indices: np.ndarray) -> np.ndarray:
         idx = np.asarray(indices)
         flat = idx.reshape(-1).astype(np.int64)
         rs = self.m.record_size
-        out = np.zeros((flat.size, rs), np.float32)
+        out = np.zeros((flat.size, rs), self.dtype)
         valid = np.nonzero((flat >= 0) & (flat < self.m.n_records))[0]
         if valid.size:
             fi, ri = self.m.locate_many(flat[valid])
@@ -261,8 +326,8 @@ class BlockReader:
             for s, e in zip(starts, ends):
                 f, n = int(fi[s]), int(e - s)
                 block = self._read_run(f, int(ri[s]), n)
-                if self.gains is not None:
-                    block = block * self.gains[f]
+                if not self.raw:
+                    block = block.astype(np.float32) * self.scales[f]
                 out[valid[s:e]] = block.reshape(n, rs)
             with self._stat_lock:
                 self.reads += len(starts)

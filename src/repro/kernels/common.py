@@ -12,10 +12,33 @@ import functools
 import jax
 import numpy as np
 
+from repro.core.params import PCM_DECODE_SCALE
+
 
 @functools.cache
 def use_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def dequantize(pcm, scales=None):
+    """int16 PCM -> float32 waveform, bitwise-matching the host decode.
+
+    ``scales`` is the per-record float32 decode-scale sidecar
+    (PCM_DECODE_SCALE * calibration gain, fused in float32 on the host
+    — see ``data.wavio``), shaped like ``pcm`` minus its trailing sample
+    axis; ``None`` means plain full-scale decode.  One int16->float32
+    convert (exact) plus ONE float32 multiply — the same single rounding
+    the host float path performs, so the two transports agree bitwise.
+    Used by the XLA fallback path; the Pallas kernels inline the same
+    two ops per block so the float32 waveform never exists in HBM.
+    """
+    import jax.numpy as jnp
+
+    w = pcm.astype(jnp.float32)
+    if scales is None:
+        return w * jnp.float32(PCM_DECODE_SCALE)
+    s = jnp.asarray(scales, jnp.float32)
+    return w * s[..., None]
 
 
 def round_up(x: int, m: int) -> int:

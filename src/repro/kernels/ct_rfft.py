@@ -75,9 +75,25 @@ def _constants(p, n1: int, n2: int, dtype=np.float32):
 
 def _body(x_ref, w_ref, c1_ref, s1_ref, tr_ref, ti_ref, c2_ref, s2_ref,
           sc_ref, o_ref, *, n1: int, n2: int):
-    bf = x_ref.shape[0]
+    _chain(x_ref[...], w_ref, c1_ref, s1_ref, tr_ref, ti_ref, c2_ref,
+           s2_ref, sc_ref, o_ref, n1=n1, n2=n2)
+
+
+def _body_q(x_ref, q_ref, w_ref, c1_ref, s1_ref, tr_ref, ti_ref, c2_ref,
+            s2_ref, sc_ref, o_ref, *, n1: int, n2: int):
+    """int16 variant: ``q_ref`` (block_frames, 1) holds the per-frame
+    decode scale; one convert + one multiply in VMEM (the host decode's
+    exact rounding) before the same two-stage CT chain."""
+    _chain(x_ref[...].astype(jnp.float32) * q_ref[...], w_ref, c1_ref,
+           s1_ref, tr_ref, ti_ref, c2_ref, s2_ref, sc_ref, o_ref,
+           n1=n1, n2=n2)
+
+
+def _chain(x, w_ref, c1_ref, s1_ref, tr_ref, ti_ref, c2_ref, s2_ref,
+           sc_ref, o_ref, *, n1: int, n2: int):
+    bf = x.shape[0]
     n2h = c2_ref.shape[1]
-    a = (x_ref[...].reshape(bf, n1, n2) * w_ref[...][None])
+    a = (x.reshape(bf, n1, n2) * w_ref[...][None])
     # Stage 1 (real input): Y = D1 @ A, batched over frames.
     yr = jnp.einsum("nk,bnm->bkm", c1_ref[...], a,
                     precision=_PREC, preferred_element_type=jnp.float32)
@@ -104,11 +120,14 @@ def _body(x_ref, w_ref, c1_ref, s1_ref, tr_ref, ti_ref, c2_ref, s2_ref,
 
 @functools.partial(jax.jit, static_argnums=(1, 2, 3, 4))
 def ct_frame_psd(frames: jnp.ndarray, p, n1: int | None = None,
-                 block_frames: int = 32, interpret: bool | None = None
-                 ) -> jnp.ndarray:
+                 block_frames: int = 32, interpret: bool | None = None,
+                 scales: jnp.ndarray | None = None) -> jnp.ndarray:
     """One-sided PSD of pre-framed data via two-stage CT matmuls.
 
     frames: (n_frames, window_size); returns (n_frames, n_bins).
+    Accepts raw int16 PCM frames (``scales``: per-frame decode scales,
+    (n_frames,); None = plain full-scale decode) — dequantization then
+    happens in VMEM, bitwise-equal to the host decode.
     """
     if interpret is None:
         interpret = common.use_interpret()
@@ -117,30 +136,46 @@ def ct_frame_psd(frames: jnp.ndarray, p, n1: int | None = None,
         n1 = 1 << (int(np.log2(nfft)) + 1) // 2   # ~sqrt(N), power of two
     n2 = nfft // n1
     n2h = n2 // 2 + 1
+    quantized = frames.dtype == jnp.int16
 
     consts = _constants(p, n1, n2)
     nf = frames.shape[0]
     fpad = common.round_up(max(nf, 1), block_frames)
-    x = common.pad_axis(frames.astype(jnp.float32), 0, fpad)
+    x = common.pad_axis(frames if quantized
+                        else frames.astype(jnp.float32), 0, fpad)
     if p.window_size < nfft:
         x = common.pad_axis(x, 1, nfft)
 
     grid = (fpad // block_frames,)
     full = lambda shape: pl.BlockSpec(shape, lambda i: tuple(0 for _ in shape))
+    in_specs = [
+        pl.BlockSpec((block_frames, nfft), lambda i: (i, 0)),
+        full((n1, n2)),          # window
+        full((n1, n1)), full((n1, n1)),      # stage-1 DFT
+        full((n1, n2)), full((n1, n2)),      # twiddle
+        full((n2, n2h)), full((n2, n2h)),    # stage-2 DFT
+        full((n2h, n1)),                     # scale
+    ]
+    operands = [x, *[jnp.asarray(c) for c in consts]]
+    body = functools.partial(_body, n1=n1, n2=n2)
+    if quantized:
+        if scales is None:
+            sq = jnp.full((nf,), common.PCM_DECODE_SCALE, jnp.float32)
+        else:
+            sq = jnp.asarray(scales, jnp.float32)
+        sq = common.pad_axis(sq, 0, fpad).reshape(fpad, 1)
+        in_specs.insert(1, pl.BlockSpec((block_frames, 1),
+                                        lambda i: (i, 0)))
+        operands.insert(1, sq)
+        body = functools.partial(_body_q, n1=n1, n2=n2)
+
     out = pl.pallas_call(
-        functools.partial(_body, n1=n1, n2=n2),
+        body,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_frames, nfft), lambda i: (i, 0)),
-            full((n1, n2)),          # window
-            full((n1, n1)), full((n1, n1)),      # stage-1 DFT
-            full((n1, n2)), full((n1, n2)),      # twiddle
-            full((n2, n2h)), full((n2, n2h)),    # stage-2 DFT
-            full((n2h, n1)),                     # scale
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((block_frames, n2h * n1), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((fpad, n2h * n1), jnp.float32),
         interpret=interpret,
-    )(x, *[jnp.asarray(c) for c in consts])
+    )(*operands)
 
     return out[:nf, : p.n_bins]

@@ -29,6 +29,15 @@ Two variants:
     accumulation, grid (records, bin_blocks, frame_chunks); the per-frame
     PSD never exists in HBM.  This is the beyond-paper fused variant
     measured in EXPERIMENTS.md §Perf.
+
+Both accept **raw int16 PCM** payloads (dtype drives the dispatch): the
+hop-views stay int16 all the way into VMEM, and the kernel body
+dequantizes each block with one convert + one multiply by the per-record
+decode scale (the sidecar from ``data.wavio``, PCM full-scale x
+calibration fused on host) right before the DFT matmuls.  The float32
+waveform therefore never exists in HBM, host→device payload traffic is
+halved, and — because it is the exact same single f32 rounding the host
+decode performs — the results are bitwise-identical to the float path.
 """
 from __future__ import annotations
 
@@ -75,40 +84,71 @@ def _bin_scale(p, extra: float = 1.0, dtype=np.float32) -> np.ndarray:
     return (w * periodogram_scale(p) * extra).astype(dtype)[None, :]
 
 
+def _dft_accum(view, c_ref, s_ref, *, m: int):
+    """Accumulate the m hop-phase matmuls: sum_r view(r) @ (C_r, S_r).
+
+    ``view(r)`` yields the (rows, hop) float32 block for phase r — the
+    raw VMEM block on the float path, or the dequantized block (one
+    convert + one traced scale multiply, the host decode's exact
+    rounding) on the int16 path.  Shared by all four kernel bodies so
+    the two transports can never drift apart.
+    """
+    acc_r = None
+    acc_i = None
+    for r in range(m):  # static unroll over hop phases
+        v = view(r)
+        cr = jnp.dot(v, c_ref[r], precision=_PREC,
+                     preferred_element_type=jnp.float32)
+        ci = jnp.dot(v, s_ref[r], precision=_PREC,
+                     preferred_element_type=jnp.float32)
+        acc_r = cr if acc_r is None else acc_r + cr
+        acc_i = ci if acc_i is None else acc_i + ci
+    return acc_r, acc_i
+
+
 # ----------------------------------------------------------------------
 # Variant 1: per-frame PSD
 # ----------------------------------------------------------------------
 
 def _frame_psd_body(v_ref, c_ref, s_ref, scale_ref, o_ref, *, m: int):
-    acc_r = jnp.zeros(o_ref.shape, dtype=jnp.float32)
-    acc_i = jnp.zeros(o_ref.shape, dtype=jnp.float32)
-    for r in range(m):  # static unroll over hop phases
-        v = v_ref[r]
-        acc_r += jnp.dot(v, c_ref[r], precision=_PREC,
-                         preferred_element_type=jnp.float32)
-        acc_i += jnp.dot(v, s_ref[r], precision=_PREC,
-                         preferred_element_type=jnp.float32)
+    acc_r, acc_i = _dft_accum(lambda r: v_ref[r], c_ref, s_ref, m=m)
+    o_ref[...] = (acc_r * acc_r + acc_i * acc_i) * scale_ref[0, :]
+
+
+def _frame_psd_body_q(v_ref, q_ref, c_ref, s_ref, scale_ref, o_ref,
+                      *, m: int):
+    """int16 variant: ``q_ref`` holds the per-frame decode scale
+    (block_frames, 1), applied to the samples BEFORE the DFT matmul —
+    the same order as the host decode, so results match bitwise."""
+    q = q_ref[...]
+    acc_r, acc_i = _dft_accum(
+        lambda r: v_ref[r].astype(jnp.float32) * q, c_ref, s_ref, m=m)
     o_ref[...] = (acc_r * acc_r + acc_i * acc_i) * scale_ref[0, :]
 
 
 @functools.partial(jax.jit, static_argnums=(1, 2, 3, 4))
 def frame_psd(x: jnp.ndarray, p, block_frames: int = 256,
-              block_bins: int = 128, interpret: bool | None = None
-              ) -> jnp.ndarray:
+              block_bins: int = 128, interpret: bool | None = None,
+              scales: jnp.ndarray | None = None) -> jnp.ndarray:
     """Per-frame one-sided PSD via the fused Pallas kernel.
 
-    x: (n_samples,) or (n_records, record_size)
+    x: (n_samples,) or (n_records, record_size), float32 OR raw int16
+    PCM (then ``scales`` carries the per-record decode scales — one per
+    record for batched input, a scalar for 1-D input; None = plain
+    full-scale decode).
     returns (n_frames, n_bins) or (n_records, frames_per_record, n_bins).
     """
     if interpret is None:
         interpret = common.use_interpret()
+    quantized = x.dtype == jnp.int16
     batched = x.ndim == 2
-    v = _views(x.astype(jnp.float32), p.window_size, p.hop)  # (m,[R,]nf,hop)
+    v = _views(x if quantized else x.astype(jnp.float32),
+               p.window_size, p.hop)                     # (m,[R,]nf,hop)
     m = v.shape[0]
     nf = v.shape[-2]
     if batched:
         n_rec = x.shape[0]
-        v = v.reshape(m, n_rec * nf, hop := p.hop)
+        v = v.reshape(m, n_rec * nf, p.hop)
     total_frames = v.shape[1]
 
     c, s = _fold_matrices(p)
@@ -122,20 +162,41 @@ def frame_psd(x: jnp.ndarray, p, block_frames: int = 256,
     scale = np.pad(scale, ((0, 0), (0, bpad - p.n_bins)))
 
     grid = (fpad // block_frames, bpad // block_bins)
+    in_specs = [
+        pl.BlockSpec((m, block_frames, p.hop), lambda i, k: (0, i, 0)),
+        pl.BlockSpec((m, p.hop, block_bins), lambda i, k: (0, 0, k)),
+        pl.BlockSpec((m, p.hop, block_bins), lambda i, k: (0, 0, k)),
+        pl.BlockSpec((1, block_bins), lambda i, k: (0, k)),
+    ]
+    operands = [v, jnp.asarray(c), jnp.asarray(s), jnp.asarray(scale)]
+    body = functools.partial(_frame_psd_body, m=m)
+    if quantized:
+        # per-record decode scales -> one scale per (flattened) frame
+        if scales is None:
+            sf = jnp.full((total_frames,), common.PCM_DECODE_SCALE,
+                          jnp.float32)
+        elif batched:
+            sf = jnp.broadcast_to(
+                jnp.asarray(scales, jnp.float32)[:, None],
+                (n_rec, nf)).reshape(-1)
+        else:
+            sf = jnp.full((total_frames,),
+                          jnp.asarray(scales, jnp.float32))
+        sf = common.pad_axis(sf, 0, fpad).reshape(fpad, 1)
+        in_specs.insert(1, pl.BlockSpec((block_frames, 1),
+                                        lambda i, k: (i, 0)))
+        operands.insert(1, sf)
+        body = functools.partial(_frame_psd_body_q, m=m)
+
     out = pl.pallas_call(
-        functools.partial(_frame_psd_body, m=m),
+        body,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((m, block_frames, p.hop), lambda i, k: (0, i, 0)),
-            pl.BlockSpec((m, p.hop, block_bins), lambda i, k: (0, 0, k)),
-            pl.BlockSpec((m, p.hop, block_bins), lambda i, k: (0, 0, k)),
-            pl.BlockSpec((1, block_bins), lambda i, k: (0, k)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((block_frames, block_bins),
                                lambda i, k: (i, k)),
         out_shape=jax.ShapeDtypeStruct((fpad, bpad), jnp.float32),
         interpret=interpret,
-    )(v, jnp.asarray(c), jnp.asarray(s), jnp.asarray(scale))
+    )(*operands)
 
     out = out[:total_frames, : p.n_bins]
     if batched:
@@ -147,41 +208,52 @@ def frame_psd(x: jnp.ndarray, p, block_frames: int = 256,
 # Variant 2: fused Welch (per-record mean PSD, frames never materialized)
 # ----------------------------------------------------------------------
 
-def _welch_body(v_ref, c_ref, s_ref, scale_ref, o_ref, *, m: int):
+def _welch_update(view, c_ref, s_ref, scale_ref, o_ref, *, m: int):
+    """One frame-chunk's contribution to the per-record Welch mean."""
     f = pl.program_id(2)
 
     @pl.when(f == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    acc_r = None
-    acc_i = None
-    for r in range(m):
-        v = v_ref[r, 0]  # (chunk_frames, hop)
-        cr = jnp.dot(v, c_ref[r], precision=_PREC,
-                     preferred_element_type=jnp.float32)
-        ci = jnp.dot(v, s_ref[r], precision=_PREC,
-                     preferred_element_type=jnp.float32)
-        acc_r = cr if acc_r is None else acc_r + cr
-        acc_i = ci if acc_i is None else acc_i + ci
+    acc_r, acc_i = _dft_accum(view, c_ref, s_ref, m=m)
     psd = acc_r * acc_r + acc_i * acc_i            # (chunk_frames, bins)
     o_ref[...] += jnp.sum(psd, axis=0, keepdims=True) * scale_ref[0, :]
 
 
+def _welch_body(v_ref, c_ref, s_ref, scale_ref, o_ref, *, m: int):
+    _welch_update(lambda r: v_ref[r, 0], c_ref, s_ref, scale_ref, o_ref,
+                  m=m)
+
+
+def _welch_body_q(v_ref, q_ref, c_ref, s_ref, scale_ref, o_ref, *, m: int):
+    """int16 variant: one decode scale per record (``q_ref`` (1, 1)),
+    applied to the samples before the matmul chain — same rounding
+    order as the host decode, so the fused Welch stays bitwise-equal."""
+    q = q_ref[0, 0]
+    _welch_update(lambda r: v_ref[r, 0].astype(jnp.float32) * q,
+                  c_ref, s_ref, scale_ref, o_ref, m=m)
+
+
 @functools.partial(jax.jit, static_argnums=(1, 2, 3, 4))
 def welch_psd(records: jnp.ndarray, p, chunk_frames: int = 512,
-              block_bins: int = 128, interpret: bool | None = None
-              ) -> jnp.ndarray:
+              block_bins: int = 128, interpret: bool | None = None,
+              scales: jnp.ndarray | None = None) -> jnp.ndarray:
     """Per-record Welch PSD, (n_records, record_size) -> (n_records, n_bins).
 
     The frame axis is reduced inside the kernel (grid axis 2, innermost) so
     per-frame spectra never hit HBM — HBM traffic is m * signal + output.
+    ``records`` may be raw int16 PCM (``scales``: per-record decode
+    scales, (n_records,); None = plain full-scale decode); the float32
+    waveform then never exists in HBM either.
     """
     if interpret is None:
         interpret = common.use_interpret()
     assert records.ndim == 2
+    quantized = records.dtype == jnp.int16
     n_rec = records.shape[0]
-    v = _views(records.astype(jnp.float32), p.window_size, p.hop)
+    v = _views(records if quantized else records.astype(jnp.float32),
+               p.window_size, p.hop)
     m, _, fpr, hop = v.shape
 
     c, s = _fold_matrices(p)
@@ -196,19 +268,31 @@ def welch_psd(records: jnp.ndarray, p, chunk_frames: int = 512,
     scale = np.pad(scale, ((0, 0), (0, bpad - p.n_bins)))
 
     grid = (n_rec, bpad // block_bins, fpad // chunk_frames)
+    in_specs = [
+        pl.BlockSpec((m, 1, chunk_frames, hop),
+                     lambda r, k, f: (0, r, f, 0)),
+        pl.BlockSpec((m, hop, block_bins), lambda r, k, f: (0, 0, k)),
+        pl.BlockSpec((m, hop, block_bins), lambda r, k, f: (0, 0, k)),
+        pl.BlockSpec((1, block_bins), lambda r, k, f: (0, k)),
+    ]
+    operands = [v, jnp.asarray(c), jnp.asarray(s), jnp.asarray(scale)]
+    body = functools.partial(_welch_body, m=m)
+    if quantized:
+        if scales is None:
+            sq = jnp.full((n_rec, 1), common.PCM_DECODE_SCALE, jnp.float32)
+        else:
+            sq = jnp.asarray(scales, jnp.float32).reshape(n_rec, 1)
+        in_specs.insert(1, pl.BlockSpec((1, 1), lambda r, k, f: (r, 0)))
+        operands.insert(1, sq)
+        body = functools.partial(_welch_body_q, m=m)
+
     out = pl.pallas_call(
-        functools.partial(_welch_body, m=m),
+        body,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((m, 1, chunk_frames, hop),
-                         lambda r, k, f: (0, r, f, 0)),
-            pl.BlockSpec((m, hop, block_bins), lambda r, k, f: (0, 0, k)),
-            pl.BlockSpec((m, hop, block_bins), lambda r, k, f: (0, 0, k)),
-            pl.BlockSpec((1, block_bins), lambda r, k, f: (0, k)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, block_bins), lambda r, k, f: (r, k)),
         out_shape=jax.ShapeDtypeStruct((n_rec, bpad), jnp.float32),
         interpret=interpret,
-    )(v, jnp.asarray(c), jnp.asarray(s), jnp.asarray(scale))
+    )(*operands)
 
     return out[:, : p.n_bins]

@@ -7,6 +7,12 @@
                Paper set 2.
   * xla      — core.spectra fallback (jnp.fft) for anything else.
 
+All entry points also accept **raw int16 PCM** (dtype-dispatched) with a
+per-record decode-scale sidecar (``scales``): the Pallas backends
+dequantize inside the kernel body (the float32 waveform never exists in
+HBM), the XLA fallback dequantizes inline — all three bitwise-identical
+to feeding host-decoded float32.
+
 All kernels auto-select interpret mode off-TPU (kernels.common).
 """
 from __future__ import annotations
@@ -14,7 +20,8 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core import spectra
-from . import ct_rfft, framepsd, tol as tol_kernel, welch as welch_kernel
+from . import common, ct_rfft, framepsd, tol as tol_kernel, \
+    welch as welch_kernel
 
 
 def psd_backend(p) -> str:
@@ -25,28 +32,47 @@ def psd_backend(p) -> str:
     return "xla"
 
 
-def frame_psd(x: jnp.ndarray, p, backend: str | None = None) -> jnp.ndarray:
-    """Per-frame PSD. x: (n_samples,) or (n_records, record_size)."""
+def _frame_scales(scales, lead: tuple[int, ...], nf: int):
+    """Per-record decode scales -> one per flattened frame (or None)."""
+    if scales is None:
+        return None
+    s = jnp.asarray(scales, jnp.float32)
+    return jnp.broadcast_to(s[..., None], lead + (nf,)).reshape(-1)
+
+
+def frame_psd(x: jnp.ndarray, p, backend: str | None = None,
+              scales: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Per-frame PSD. x: (n_samples,) or (n_records, record_size),
+    float32 or raw int16 PCM (+ per-record ``scales`` sidecar)."""
     backend = backend or psd_backend(p)
+    quantized = x.dtype == jnp.int16
     if backend == "direct":
-        return framepsd.frame_psd(x, p)
+        return framepsd.frame_psd(x, p, scales=scales)
     if backend == "ct":
         frames = spectra.frame_signal(x, p.window_size, p.hop)
         shape = frames.shape
-        out = ct_rfft.ct_frame_psd(frames.reshape(-1, p.window_size), p)
+        sf = _frame_scales(scales, shape[:-2], shape[-2]) \
+            if quantized else None
+        out = ct_rfft.ct_frame_psd(frames.reshape(-1, p.window_size), p,
+                                   scales=sf)
         return out.reshape(*shape[:-1], p.n_bins)
+    if quantized:
+        x = common.dequantize(x, scales)
     return spectra.frame_psd(x, p)
 
 
-def welch_psd(records: jnp.ndarray, p, backend: str | None = None
-              ) -> jnp.ndarray:
-    """Per-record Welch PSD. records: (n_records, record_size)."""
+def welch_psd(records: jnp.ndarray, p, backend: str | None = None,
+              scales: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Per-record Welch PSD. records: (n_records, record_size),
+    float32 or raw int16 PCM (+ per-record ``scales`` sidecar)."""
     backend = backend or psd_backend(p)
     if backend == "direct":
-        return framepsd.welch_psd(records, p)
+        return framepsd.welch_psd(records, p, scales=scales)
     if backend == "ct":
-        fp = frame_psd(records, p, backend="ct")
+        fp = frame_psd(records, p, backend="ct", scales=scales)
         return welch_kernel.welch_mean(fp)
+    if records.dtype == jnp.int16:
+        records = common.dequantize(records, scales)
     return spectra.welch_psd(records, p)
 
 

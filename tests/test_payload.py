@@ -1,0 +1,288 @@
+"""Raw-int16 payload transport: bitwise identity to the float32 path
+across {sync, async} x {fresh, mid-job resume}, the calibration
+decode-scale sidecar round-trip, payload-dtype propagation through
+prefetch/loader, buffer donation, and the host-copy fast paths."""
+import numpy as np
+import pytest
+
+from repro import api
+from repro.api import engine
+from repro.core.manifest import DatasetManifest, plan
+from repro.core.params import DepamParams, PCM_DECODE_SCALE
+from repro.data.wavio import BlockReader, WavRecordReader, write_dataset
+from repro.kernels import common as kcommon
+
+P = DepamParams(nfft=256, window_size=256, window_overlap=128,
+                record_size_sec=0.25)
+COUNTS = (3, 5, 2, 4)
+ALL = ("welch", "spl", "tol", "percentiles")
+
+
+def het_manifest():
+    return DatasetManifest.from_files(COUNTS, record_size=P.record_size,
+                                      fs=P.fs, seed=23)
+
+
+@pytest.fixture(scope="module")
+def dataset(tmp_path_factory):
+    root = str(tmp_path_factory.mktemp("wavs"))
+    m = het_manifest()
+    gains = np.linspace(0.5, 2.0, m.n_files).astype(np.float32)
+    write_dataset(root, m)
+    return root, m, gains
+
+
+def wav_job(root, m, gains, payload=None, store=None):
+    j = (api.job(m, P).features(*ALL).chunk(4)
+         .source(api.WavSource(root, calibration=gains)))
+    if payload is not None:
+        j = j.payload(payload)
+    if store is not None:
+        j = j.to(store)
+    return j
+
+
+class TestBitwiseMatrix:
+    """The acceptance contract: the int16 transport is bitwise-identical
+    to float32 — features AND epoch aggregates — in every executor mode
+    and across a mid-job crash/resume."""
+
+    def test_sync_fresh(self, dataset):
+        root, m, gains = dataset
+        f32 = wav_job(root, m, gains).run()
+        i16 = wav_job(root, m, gains, payload="int16").run()
+        for name in ALL:
+            assert np.array_equal(f32[name], i16[name]), name
+        assert np.array_equal(f32["mean_welch"], i16["mean_welch"])
+        assert i16.n_records == m.n_records
+
+    def test_async_fresh(self, dataset):
+        root, m, gains = dataset
+        f32 = wav_job(root, m, gains).run()
+        i16 = wav_job(root, m, gains, payload="int16") \
+            .async_io(depth=2).run()
+        for name in ALL:
+            assert np.array_equal(f32[name], i16[name]), name
+        assert np.array_equal(f32["mean_welch"], i16["mean_welch"])
+
+    @pytest.mark.parametrize("async_io", [False, True])
+    def test_resume_mid_job(self, dataset, tmp_path, async_io):
+        root, m, gains = dataset
+        oneshot = wav_job(root, m, gains).run()
+        d = str(tmp_path / "store")
+        crashed = wav_job(root, m, gains, payload="int16", store=d).limit(1)
+        resumed = wav_job(root, m, gains, payload="int16", store=d)
+        if async_io:
+            crashed = crashed.async_io(depth=2)
+            resumed = resumed.async_io(depth=2)
+        crashed.run()
+        out = resumed.run()
+        for name in ALL:
+            assert np.array_equal(np.asarray(out[name]),
+                                  oneshot[name]), name
+        assert np.array_equal(out["mean_welch"], oneshot["mean_welch"])
+        assert out.n_records == m.n_records
+
+    def test_cross_payload_resume(self, dataset, tmp_path):
+        """A job crashed on one transport resumes on the other: the
+        store holds decoded features, so transports interoperate."""
+        root, m, gains = dataset
+        oneshot = wav_job(root, m, gains).run()
+        d = str(tmp_path / "store")
+        wav_job(root, m, gains, payload="float32", store=d).limit(1).run()
+        out = wav_job(root, m, gains, payload="int16", store=d).run()
+        for name in ALL:
+            assert np.array_equal(np.asarray(out[name]),
+                                  oneshot[name]), name
+        assert np.array_equal(out["mean_welch"], oneshot["mean_welch"])
+
+    def test_xla_fallback_bitwise(self, dataset):
+        root, m, gains = dataset
+        f32 = wav_job(root, m, gains).kernels(False).run()
+        i16 = wav_job(root, m, gains, payload="int16") \
+            .kernels(False).run()
+        for name in ALL:
+            assert np.array_equal(f32[name], i16[name]), name
+
+
+class TestSidecar:
+    def test_scales_round_trip(self, dataset):
+        """raw PCM * sidecar scale reconstructs the calibrated float
+        decode bitwise, for both readers."""
+        root, m, gains = dataset
+        idx = np.arange(m.n_records)
+        for cls in (BlockReader, WavRecordReader):
+            f = cls(root, m, calibration=gains)
+            r = cls(root, m, calibration=gains, raw=True)
+            pcm = r(idx)
+            assert pcm.dtype == np.dtype("<i2")
+            scales = r.scales_for(idx)
+            fi, _ = m.locate_many(idx)
+            assert np.array_equal(scales, PCM_DECODE_SCALE * gains[fi])
+            assert np.array_equal(
+                f(idx), pcm.astype(np.float32) * scales[:, None])
+            for reader in (f, r):
+                if hasattr(reader, "close"):
+                    reader.close()
+
+    def test_scales_padding_and_no_calibration(self, dataset):
+        root, m, _ = dataset
+        r = BlockReader(root, m, raw=True)
+        scales = r.scales_for(np.array([0, -1, m.n_records]))
+        assert scales.dtype == np.float32
+        assert np.array_equal(scales, np.full(3, PCM_DECODE_SCALE))
+        r.close()
+
+    def test_wavsource_exposes_sidecar(self, dataset):
+        root, m, gains = dataset
+        src = api.WavSource(root, calibration=gains,
+                            payload_dtype="int16").bind(m, P)
+        idx = plan(m, 2, 3).step_indices(0)
+        assert src.fetch(idx).dtype == np.dtype("<i2")
+        fi, _ = m.locate_many(idx.reshape(-1))
+        assert np.array_equal(src.scales(idx).reshape(-1),
+                              PCM_DECODE_SCALE * gains[fi])
+        src.close()
+
+    def test_dequantize_matches_host_decode(self, dataset):
+        root, m, gains = dataset
+        f = BlockReader(root, m, calibration=gains)
+        r = BlockReader(root, m, calibration=gains, raw=True)
+        idx = np.arange(m.n_records)
+        got = np.asarray(kcommon.dequantize(r(idx), r.scales_for(idx)))
+        assert np.array_equal(got, f(idx))
+        f.close()
+        r.close()
+
+
+class TestPropagation:
+    def test_prefetch_preserves_payload_dtype(self, dataset):
+        root, m, gains = dataset
+        src = api.PrefetchSource(
+            api.WavSource(root, calibration=gains, payload_dtype="int16"),
+            depth=2, overdecompose=3).bind(m, P)
+        assert src.payload_dtype == "int16"
+        pl_ = plan(m, 2, 3)
+        inline = [src.fetch(pl_.step_indices(s))
+                  for s in range(pl_.n_steps)]
+        streamed = list(src.stream(pl_, 0, pl_.n_steps))
+        for a, b in zip(inline, streamed):
+            assert b.dtype == np.dtype("<i2")
+            assert np.array_equal(a, b)
+        src.close()
+
+    def test_with_payload_reaches_wrapped_source(self, dataset):
+        root, m, gains = dataset
+        pre = api.PrefetchSource(api.WavSource(root, calibration=gains))
+        assert pre.payload_dtype == "float32"
+        raw = pre.with_payload("int16")
+        assert raw.payload_dtype == "int16"
+        assert raw.inner.payload_dtype == "int16"
+        # copy, not mutation: the original keeps its transport, so a
+        # source reused across jobs never inherits another job's knob
+        assert raw is not pre
+        assert pre.payload_dtype == "float32"
+        assert pre.inner.payload_dtype == "float32"
+
+    def test_reader_source_auto_wires_reader_sidecar(self, dataset):
+        """A calibrated raw reader passed as a plain callback keeps its
+        calibration: ReaderSource picks up the reader's own scales_for,
+        so the int16 job stays bitwise-equal to the float32 one."""
+        root, m, gains = dataset
+        f32 = (api.job(m, P).features("welch", "spl").chunk(4)
+               .source(BlockReader(root, m, calibration=gains)).run())
+        raw_reader = BlockReader(root, m, calibration=gains, raw=True)
+        i16 = (api.job(m, P).features("welch", "spl").chunk(4)
+               .source(api.ReaderSource(raw_reader,
+                                        payload_dtype="int16")).run())
+        for name in ("welch", "spl"):
+            assert np.array_equal(f32[name], i16[name]), name
+        assert np.array_equal(f32["mean_welch"], i16["mean_welch"])
+
+    def test_synth_source_rejects_int16(self):
+        with pytest.raises(ValueError, match="int16"):
+            api.job(het_manifest(), P).payload("int16").run()
+
+    def test_builder_rejects_unknown_dtype(self):
+        with pytest.raises(ValueError, match="float32.*int16"):
+            api.job(het_manifest(), P).payload("bfloat16")
+
+    def test_reader_source_rejects_float_reader_on_int16(self):
+        src = api.ReaderSource(
+            lambda idx: np.zeros((*np.shape(idx), P.record_size),
+                                 np.float32), payload_dtype="int16")
+        with pytest.raises(TypeError, match="requantiz"):
+            src.fetch(np.arange(2))
+
+    def test_reader_source_refuses_silent_pcm_upcast(self):
+        """A raw int16 reader can never leak undecoded PCM onto the
+        float32 path — neither via with_payload nor via fetch."""
+        pcm = lambda idx: np.zeros((*np.shape(idx), P.record_size),
+                                   np.int16)
+        with pytest.raises(ValueError, match="cannot ship"):
+            api.ReaderSource(pcm, payload_dtype="int16") \
+                .with_payload("float32")
+        with pytest.raises(TypeError, match="decode scale"):
+            api.ReaderSource(pcm).fetch(np.arange(2))
+
+
+class TestHostCopies:
+    def test_reader_source_skips_copy_when_dtype_matches(self):
+        payload = np.ones((2, P.record_size), np.float32)
+        src = api.ReaderSource(lambda idx: payload)
+        assert src.fetch(np.arange(2)) is payload
+
+    def test_wav_source_returns_reader_array_unchanged(self, dataset):
+        root, m, gains = dataset
+        src = api.WavSource(root, calibration=gains,
+                            payload_dtype="int16").bind(m, P)
+        reader_out = src._reader(np.arange(3))
+        fetched = src.fetch(np.arange(3))
+        assert fetched.dtype == reader_out.dtype == np.dtype("<i2")
+        src.close()
+
+    def test_pad_axis_noop_at_target_size(self):
+        import jax.numpy as jnp
+        x = jnp.ones((3, 8))
+        assert kcommon.pad_axis(x, 1, 8) is x
+        assert kcommon.pad_axis(x, 1, 4) is x      # already past target
+        assert kcommon.pad_axis(x, 1, 16).shape == (3, 16)
+
+
+class TestDonation:
+    def test_int16_payload_buffer_is_donated(self, dataset):
+        """The transport win requires the int16 buffer to be DONATED so
+        XLA can free/recycle it immediately.  On backends where no
+        output can alias it (CPU: all outputs are float32) jax proves
+        the donation happened by warning that the donated int16 buffer
+        was not usable — the early free still applies (see the NOTE in
+        api.engine); the sidecar must NOT appear in that warning."""
+        import warnings as warnings_mod
+
+        import jax.numpy as jnp
+        root, m, gains = dataset
+        specs = tuple(api.resolve_features(["welch"]))
+        # chunk=5 is unique to this test -> a fresh trace/lowering, so
+        # the donation diagnostic fires even with warm compile caches
+        step = engine.compile_step(specs, m, P, None, ("data",),
+                                   True, False, donate=True,
+                                   payload_dtype="int16")
+        src = api.WavSource(root, calibration=gains,
+                            payload_dtype="int16").bind(m, P)
+        pl_ = plan(m, 1, 5)
+        idx = pl_.step_indices(0)
+        payload = jnp.asarray(src.fetch(idx))
+        scales = jnp.asarray(src.scales(idx), jnp.float32)
+        with warnings_mod.catch_warnings(record=True) as caught:
+            warnings_mod.simplefilter("always")
+            step(payload, scales, jnp.asarray(pl_.step_mask(0)))
+        donation_notes = [str(w.message) for w in caught
+                          if "donated" in str(w.message)]
+        if donation_notes:        # CPU/GPU: donation unusable -> warns
+            assert any("int16" in note for note in donation_notes)
+            assert not any("float32[1,5]" in note
+                           for note in donation_notes)
+        else:                     # backend consumed the donation
+            assert payload.is_deleted()
+        assert not scales.is_deleted()     # sidecar is never donated
+        src.close()

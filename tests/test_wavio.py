@@ -128,11 +128,21 @@ class TestBlockReader:
         got, ref = cal(idx), plain(idx)
         assert np.array_equal(got, oracle(idx))       # both paths agree
         fi, _ = m.locate_many(idx)
-        assert np.array_equal(got, ref * gains[fi][:, None])
+        # the calibrated decode is ONE multiply by the fused per-file
+        # scale (PCM full-scale x gain) — bitwise-reconstructable from
+        # the raw PCM + sidecar, and ~the separate-gain form numerically
+        raw = BlockReader(str(tmp_path), m, calibration=gains, raw=True)
+        pcm = raw(idx)
+        assert pcm.dtype == np.dtype("<i2")
+        scales = raw.scales_for(idx)
+        assert np.array_equal(got,
+                              pcm.astype(np.float32) * scales[:, None])
+        assert np.allclose(got, ref * gains[fi][:, None], rtol=1e-6)
         with pytest.raises(ValueError, match="one gain per file"):
             BlockReader(str(tmp_path), m, calibration=np.ones(2))
         plain.close()
         cal.close()
+        raw.close()
 
     def test_truncated_file_raises_clearly(self, tmp_path):
         m = het_manifest(record_size=128, counts=(4,))
