@@ -1,10 +1,11 @@
 """Benchmark aggregator — one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV and writes the consolidated
-perf-trajectory snapshot ``BENCH_PR4.json`` at the repo root: one entry
+perf-trajectory snapshot ``BENCH_PR5.json`` at the repo root: one entry
 per benchmark with µs/call plus every derived metric (records/s,
 host→device bytes/record, file opens/step, speedups...), so future PRs
-can diff against a recorded baseline instead of re-deriving one.
+can diff against a recorded baseline instead of re-deriving one
+(``BENCH_PR4.json`` remains as the previous PR's recorded numbers).
 Snapshots are keyed by config (``fast`` vs ``full``) and merged into
 the existing file, so a ``--fast`` dev run never clobbers full-config
 baseline numbers with non-comparable ones.
@@ -47,7 +48,7 @@ def main() -> None:
 
     from benchmarks import async_pipeline, fig3_1_single_node, \
         fig3_2_speedup, job_pipeline, table2_1_param_sets, \
-        roofline_report, transfer, wav_io
+        roofline_report, transfer, wav_io, windowed_agg
 
     rows += fig3_1_single_node.run(
         workload_records=(4, 8) if fast else (4, 8, 16))
@@ -64,12 +65,17 @@ def main() -> None:
                          else (24, 40, 16, 32),
                          record_sec=0.25 if fast else 0.5,
                          iters=1 if fast else 2)
+    rows += windowed_agg.run(file_records=(6, 10, 4) if fast
+                             else (24, 40, 16, 32),
+                             record_sec=0.25 if fast else 0.5,
+                             window=5 if fast else 10,
+                             iters=1 if fast else 2)
     rows += roofline_report.run()
 
     print("\n".join(rows))
 
     out_path = os.path.abspath(os.path.join(
-        os.path.dirname(__file__), os.pardir, "BENCH_PR4.json"))
+        os.path.dirname(__file__), os.pardir, "BENCH_PR5.json"))
     snapshot: dict = {}
     if os.path.exists(out_path):
         try:

@@ -1,0 +1,138 @@
+"""Windowed-reduction benchmark: single-pass LTSA+SPD vs two-pass.
+
+The point of the multi-resolution reduction API is that windowed
+soundscape products (LTSA panels, SPD histograms, spectrum extrema)
+accumulate inside the SAME jitted step that extracts the per-record
+features — one pass over the data.  Without it, the products need a
+second pass: run the per-record job, then run (or re-read) the data
+again for the windowed reductions.  DEPAM is ingest-bound, so the pass
+count IS the cost model.
+
+This benchmark drives the same calibrated wav-fed workload both ways:
+
+  * **single-pass** — ``welch,spl,ltsa,spd,minmax`` in one job;
+  * **two-pass baseline** — job 1 extracts ``welch,spl``; job 2 re-reads
+    every record for ``ltsa,spd,minmax``.
+
+and reports host→device payload bytes per record (counted on the actual
+arrays the engine ships) plus end-to-end records/s for each.  It
+**asserts** that every windowed output is bitwise-identical across the
+two shapes — same engine math, only the pass structure differs — and
+that the single pass moves ~half the bytes (the structural, timing-free
+gate: >= ``min_byte_ratio`` fewer bytes than two passes).
+
+  PYTHONPATH=src:. python benchmarks/windowed_agg.py [--smoke]
+"""
+from __future__ import annotations
+
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro import api
+from repro.core.manifest import DatasetManifest
+from repro.core.params import DepamParams
+
+SINGLE = ("welch", "spl", "ltsa", "spd", "minmax")
+PASS1 = ("welch", "spl")
+PASS2 = ("ltsa", "spd", "minmax")
+WINDOWED = ("ltsa", "spd", "min_welch", "max_welch")
+
+
+class CountingSource(api.Source):
+    """Delegating wrapper that tallies the bytes the engine ships."""
+
+    def __init__(self, inner: api.Source):
+        self.inner = inner
+        self.payload_bytes = 0
+
+    def bind(self, m, p):
+        self.inner = self.inner.bind(m, p)
+        return self
+
+    def fetch(self, indices):
+        return self.inner.fetch(indices)
+
+    def scales(self, indices):
+        return self.inner.scales(indices)
+
+    def stream(self, plan, start, stop):
+        for payload in self.inner.stream(plan, start, stop):
+            self.payload_bytes += payload.nbytes
+            yield payload
+
+    def close(self):
+        self.inner.close()
+
+
+def _job(root, m, p, gains, features, window, chunk):
+    src = CountingSource(api.WavSource(root, calibration=gains))
+    t0 = time.perf_counter()
+    res = (api.job(m, p).features(*features).window(records=window)
+           .chunk(chunk).source(src).run())
+    return res, time.perf_counter() - t0, src.payload_bytes
+
+
+def run(file_records=(24, 40, 16, 32), record_sec=0.5, window=10,
+        chunk=8, iters=2, min_byte_ratio=1.9):
+    p = DepamParams(nfft=256, window_size=256, window_overlap=128,
+                    record_size_sec=record_sec)
+    m = DatasetManifest.from_files(file_records, record_size=p.record_size,
+                                   fs=p.fs, seed=31)
+    gains = np.linspace(0.7, 1.6, m.n_files).astype(np.float32)
+    rows = []
+    with tempfile.TemporaryDirectory() as root:
+        from repro.data.wavio import write_dataset
+        write_dataset(root, m)
+
+        # bitwise identity first (also warms the compile caches so the
+        # timed sweeps below measure steady-state throughput)
+        single, _, b_single = _job(root, m, p, gains, SINGLE, window, chunk)
+        one, _, b1 = _job(root, m, p, gains, PASS1, window, chunk)
+        two, _, b2 = _job(root, m, p, gains, PASS2, window, chunk)
+        for name in WINDOWED:
+            assert np.array_equal(single.windows[name],
+                                  two.windows[name]), \
+                f"two-pass {name!r} diverged from the single pass"
+        assert np.array_equal(single["welch"], one["welch"])
+        assert np.array_equal(single["mean_welch"], one["mean_welch"])
+
+        ratio = (b1 + b2) / b_single
+        assert ratio >= min_byte_ratio, \
+            f"single-pass ingest win regressed: two passes ship " \
+            f"{b1 + b2} B vs {b_single} B single — only {ratio:.2f}x " \
+            f"(< {min_byte_ratio}x)"
+
+        t_single = min(_job(root, m, p, gains, SINGLE, window, chunk)[1]
+                       for _ in range(iters))
+        t_two = min(_job(root, m, p, gains, PASS1, window, chunk)[1]
+                    + _job(root, m, p, gains, PASS2, window, chunk)[1]
+                    for _ in range(iters))
+
+    n = m.n_records
+    rows.append(common.row(
+        "windowed_agg/two_pass", t_two / n * 1e6,
+        f"records_per_s={n / t_two:.0f};"
+        f"bytes_per_record={(b1 + b2) / n:.0f}"))
+    rows.append(common.row(
+        "windowed_agg/single_pass", t_single / n * 1e6,
+        f"records_per_s={n / t_single:.0f};"
+        f"bytes_per_record={b_single / n:.0f};"
+        f"byte_reduction={ratio:.2f}x;speedup={t_two / t_single:.2f}x;"
+        f"bitwise_equal=yes"))
+    return rows
+
+
+if __name__ == "__main__":
+    if "--smoke" in sys.argv:
+        # CI gate: tiny dataset; bitwise identity and the pass-count
+        # byte ratio are deterministic, wall-clock is reported but
+        # never gated
+        rows = run(file_records=(6, 10, 4), record_sec=0.25, window=5,
+                   iters=1)
+    else:
+        rows = run()
+    print("\n".join(rows))

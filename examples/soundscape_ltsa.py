@@ -5,10 +5,11 @@ production scenario at miniature scale, on the SoundscapeJob API.
 
 1. writes a small wav dataset (the St-Pierre-et-Miquelon layout in
    miniature: N files x M records);
-2. runs the job HALFWAY into a resumable store and "crashes";
+2. runs the job HALFWAY into a resumable store and "crashes" —
+   mid-window, so the partially-filled LTSA/SPD carries ride the commit;
 3. restarts the SAME job expression: the store's committed cursor resumes
    exactly where the crash happened (idempotent re-execution, like Spark
-   lineage);
+   lineage) and the windowed products complete bitwise-identically;
 4. verifies the resumed result equals an uninterrupted run, and streams
    the same features through a callback sink (the live-monitoring shape).
 """
@@ -23,7 +24,9 @@ from repro.core.store import FeatureStore
 from repro.data.loader import SpeculativeLoader
 from repro.data.wavio import WavRecordReader, write_dataset
 
-FEATURES = ("welch", "spl", "tol", "percentiles")
+FEATURES = ("welch", "spl", "tol", "percentiles", "ltsa", "spd", "minmax")
+PER_RECORD = FEATURES[:4]
+WINDOWED = ("ltsa", "spd", "min_welch", "max_welch")
 
 
 def main():
@@ -37,8 +40,10 @@ def main():
         write_dataset(wav_dir, m)
 
         def soundscape_job():
-            return (api.job(m, p).features(*FEATURES).chunk(4)
-                    .source(api.WavSource(wav_dir)))
+            # per-record features AND the multi-resolution soundscape
+            # products, one pass: LTSA/SPD/extrema windowed per file
+            return (api.job(m, p).features(*FEATURES).window(per_file=True)
+                    .chunk(4).source(api.WavSource(wav_dir)))
 
         # ---- phase 1: run 2 steps, then "crash" ----
         soundscape_job().to(store_dir).limit(2).run()
@@ -49,12 +54,18 @@ def main():
         resumed = soundscape_job().to(store_dir).run()
         oneshot = soundscape_job().run()
         ok = all(np.array_equal(np.asarray(resumed[f]), oneshot[f])
-                 for f in FEATURES)
-        print(f"resume == uninterrupted (all {len(FEATURES)} features): {ok}")
+                 for f in PER_RECORD) and \
+            all(np.array_equal(resumed.windows[w], oneshot.windows[w])
+                for w in WINDOWED)
+        print(f"resume == uninterrupted ({len(PER_RECORD)} per-record "
+              f"features + {len(WINDOWED)} windowed products): {ok}")
         print(f"welch {resumed['welch'].shape}, "
               f"percentiles {resumed['percentiles'].shape}, "
               f"mean SPL {np.mean(resumed['spl']):.1f} dB, "
               f"records {resumed.n_records}")
+        print(f"per-file LTSA {resumed['ltsa'].shape}, "
+              f"SPD {resumed['spd'].shape} "
+              f"(window edges {resumed.window_edges['ltsa'].tolist()})")
 
         # ---- phase 3: stream to a callback sink (live monitoring) ----
         stream_steps = []

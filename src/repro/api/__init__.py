@@ -5,9 +5,12 @@ API compose freely:
 
   * **features** — a registry of :class:`FeatureSpec` (welch, spl, tol,
     percentiles, yours): each spec declares its per-record output shape,
-    its jitted per-chunk compute, and an optional epoch aggregator.  All
-    selected features compile into ONE jitted step, so they share the
-    Welch/frame-PSD intermediates and make a single pass over the data.
+    its jitted per-chunk compute, and optional :class:`Reduction`\\ s —
+    windowed soundscape products (``ltsa``/``spd``/``minmax``, at the
+    resolution the builder's ``.window(...)`` picks) or whole-epoch
+    aggregates (``mean_welch``).  All selected features compile into ONE
+    jitted step, so they share the Welch/frame-PSD intermediates and
+    make a single pass over the data — reductions included.
   * **sources** — where records come from: device-synthesized
     (:class:`SynthSource`), wav files (:class:`WavSource`), or any host
     callback (:class:`ReaderSource`).
@@ -41,7 +44,9 @@ Adding a workload is a registry call — no engine, store, or CLI edits::
     api.register(api.FeatureSpec(name="band_energy", ...))
 """
 from .engine import ExecOptions
-from .features import (FeatureContext, FeatureSpec, EpochAggregate,
+from .features import (FeatureContext, FeatureSpec, Reduction, StateField,
+                       Window, EPOCH_WINDOW, JOB_WINDOW, mean_reduction,
+                       SPD_DB_MAX, SPD_DB_MIN, SPD_DB_STEP, SPD_N_DB,
                        SPECTRUM_PERCENTILES, feature_names, get_feature,
                        register, resolve_features, unregister)
 from .sources import (PrefetchSource, ReaderSource, Source, SynthSource,
@@ -53,7 +58,9 @@ from .job import JobResult, SoundscapeJob, job
 
 __all__ = [
     "ExecOptions",
-    "FeatureContext", "FeatureSpec", "EpochAggregate",
+    "FeatureContext", "FeatureSpec", "Reduction", "StateField", "Window",
+    "EPOCH_WINDOW", "JOB_WINDOW", "mean_reduction",
+    "SPD_DB_MAX", "SPD_DB_MIN", "SPD_DB_STEP", "SPD_N_DB",
     "SPECTRUM_PERCENTILES", "feature_names", "get_feature", "register",
     "resolve_features", "unregister",
     "Source", "SynthSource", "ReaderSource", "WavSource", "PrefetchSource",

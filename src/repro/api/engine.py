@@ -6,8 +6,9 @@ Execution model (unchanged from the paper, Fig 2.1):
     one jitted step per chunk, and commits progress through the sink;
   * the *executors* are the mesh devices: each processes its contiguous
     slice of records entirely locally (the HDFS-locality analogue);
-  * the only collective is the epoch aggregate (a psum of the partials
-    declared by feature specs — the paper's final timestamp join).
+  * the only collectives are the reduction merges (psums of the window
+    partials declared by feature specs — the paper's final timestamp
+    join, generalized to LTSA/SPD time resolutions).
 
 What the API redesign changed is *what runs inside the step*: every
 selected :class:`FeatureSpec` traces against one shared
@@ -18,11 +19,13 @@ What the pipelined executor changes is *when things happen around the
 step*.  The driver loop is a software pipeline over three resources —
 host readers, devices, and the sink writer — instead of a serial chain:
 
-  * the epoch-aggregate accumulator lives ON-DEVICE as a jitted carry
-    (``compile_agg_update``), so no step blocks on a device→host sync;
-    the accumulator is materialized once at job end, plus at the commit
-    boundaries of sinks that persist it (async copies, off the critical
-    path);
+  * the reduction accumulator (epoch aggregates AND the multi-window
+    LTSA/SPD/extrema carries) lives ON-DEVICE as a jitted carry
+    (``compile_reduce_update``), so no step blocks on a device→host
+    sync; the accumulator is materialized once at job end, plus at the
+    commit boundaries of sinks that persist it (async copies, off the
+    critical path), where freshly-closed windows are finalized and
+    flushed into the sink just before the commit that covers them;
   * up to ``ExecOptions.inflight`` steps stay in flight: step k+1 is
     dispatched while step k's outputs transfer to the host via
     ``copy_to_host_async`` and drain into the sink;
@@ -56,7 +59,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.manifest import DatasetManifest, ShardPlan
 from repro.core.params import DepamParams
-from .features import FeatureContext, FeatureSpec
+from .features import (EPOCH_WINDOW, FeatureContext, FeatureSpec,
+                       Reduction, StateField, Window)
 from .sinks import Sink
 from .sources import Source, synth_record
 
@@ -124,6 +128,11 @@ def compile_step(specs: tuple[FeatureSpec, ...], m: DatasetManifest,
         for s in specs:
             val = s.compute(ctx)
             val = val.reshape(lead + val.shape[1:])
+            if s.shape is None:
+                # reduction-only feature: never stored, so padding slots
+                # need no fill — the reductions mask them to identities
+                out[s.name] = val
+                continue
             fmask = mask.reshape(lead + (1,) * (val.ndim - len(lead)))
             out[s.name] = jnp.where(fmask, val,
                                     jnp.asarray(s.fill, val.dtype))
@@ -159,33 +168,124 @@ def compile_step(specs: tuple[FeatureSpec, ...], m: DatasetManifest,
                    out_shardings=shard, **kw)
 
 
-@functools.lru_cache(maxsize=64)
-def compile_agg_update(specs: tuple[FeatureSpec, ...], mesh: Mesh | None,
-                       data_axes: tuple[str, ...],
-                       donate: bool = False) -> Callable:
-    """Epoch-aggregate carry update: state' = state + step partials.
+@dataclasses.dataclass(frozen=True)
+class ReductionBinding:
+    """One reduction resolved against a concrete window: the engine's
+    unit of carry state.  Hashable (it keys the compile cache)."""
 
-    Takes (state, outputs, mask) and returns the new state, where state
-    is {feature: running sum, "__c:"+feature: Kahan compensation,
-    "__live__": record count} living ON-DEVICE across the whole job;
-    under a mesh the replicated out_sharding makes XLA insert the psum.
-    The compensated sum keeps float32 accumulation error O(eps)
-    regardless of step count (the host-side float64 loop this replaces
-    got the same property from width; XLA does not reassociate floats,
-    so the compensation survives compilation).  ``donate`` recycles the
-    old state's buffers — only safe when no per-step reference to the
-    carry is kept (i.e. no sink consumes commit state).
+    feature: str                    # name of the feature value it reads
+    red: Reduction
+    wkey: str                       # resolved window routing key
+    n_windows: int
+    fields: tuple[StateField, ...]  # red.init(m, p), resolved once
+
+    @property
+    def out_name(self) -> str:
+        return self.red.out_name
+
+    @property
+    def to_epoch(self) -> bool:
+        """Declared-epoch reductions publish (squeezed) to
+        ``JobResult.epoch``; everything else is a windowed output."""
+        return self.red.window.kind == "epoch"
+
+
+def _sk(b: "ReductionBinding", field: str) -> str:
+    """Carry/commit key for one state field.  The ``__`` prefix marks it
+    opaque to sinks (persisted verbatim, never interpreted); the window
+    key is part of the identity, so resuming a cursor accumulated at a
+    different window resolution fails the key match even when the
+    window COUNT happens to coincide."""
+    return f"__r:{b.wkey}:{b.out_name}:{field}"
+
+
+def resolve_bindings(specs, m: DatasetManifest, p: DepamParams,
+                     job_window: Window | None
+                     ) -> tuple[tuple[ReductionBinding, ...],
+                                dict[str, Window]]:
+    """Bind every selected reduction to its concrete window.
+
+    ``job``-window reductions resolve to ``job_window`` (epoch when the
+    builder never called ``.window(...)``); returns the bindings plus
+    the distinct resolved windows by routing key.
     """
-    agg_specs = [s for s in specs if s.aggregate is not None]
+    job_window = job_window or EPOCH_WINDOW
+    bindings: list[ReductionBinding] = []
+    windows: dict[str, Window] = {}
+    owner: dict[str, str] = {}
+    for s in specs:
+        for red in s.reductions:
+            win = job_window if red.window.kind == "job" else red.window
+            if red.out_name in owner:
+                raise ValueError(
+                    f"reduction output {red.out_name!r} declared by both "
+                    f"{owner[red.out_name]!r} and {s.name!r} — outputs "
+                    f"must be unique across the selected features")
+            owner[red.out_name] = s.name
+            windows[win.key] = win
+            bindings.append(ReductionBinding(
+                feature=s.name, red=red, wkey=win.key,
+                n_windows=win.n_windows(m), fields=tuple(red.init(m, p))))
+    return tuple(bindings), windows
 
-    def update(state, out, mask):
+
+@functools.lru_cache(maxsize=64)
+def compile_reduce_update(bindings: tuple[ReductionBinding, ...],
+                          mesh: Mesh | None, data_axes: tuple[str, ...],
+                          donate: bool = False) -> Callable:
+    """Multi-window carry update: state' = state ⊕ step contributions.
+
+    Takes ``(state, outputs, mask, wids)`` and returns the new state.
+    ``state`` maps ``__r:<window>:<out>:<field>`` to an
+    ``(n_windows, *shape)`` array (plus ``:c`` Kahan companions for
+    ksum fields and the ``__live__`` record count), living ON-DEVICE
+    across the whole job.
+    ``wids`` maps each distinct window key to the step's
+    ``(n_shards, chunk)`` window ids (host-computed from the plan, so
+    the program never retraces).  Each reduction's per-record
+    contributions are segment-reduced into their window slots and merged
+    into the carry with the field's declared associative op; under a
+    mesh the replicated out_sharding makes XLA insert the collective.
+    ``donate`` recycles the old state's buffers — only safe when no
+    per-step reference to the carry is kept (no sink consumes commit
+    state).
+    """
+
+    def update(state, out, mask, wids):
+        fmask = mask.reshape(-1)
         new = {}
-        for s in agg_specs:
-            part = s.aggregate.local(out[s.name], mask)
-            y = part - state["__c:" + s.name]
-            t = state[s.name] + y
-            new["__c:" + s.name] = (t - state[s.name]) - y
-            new[s.name] = t
+        for b in bindings:
+            val = out[b.feature]
+            val = val.reshape((-1,) + val.shape[2:])
+            w = wids[b.wkey].reshape(-1)
+            contribs = b.red.update(val, fmask)
+            for f in b.fields:
+                key = _sk(b, f.name)
+                c = contribs[f.name]
+                if f.merge in ("sum", "ksum"):
+                    part = jax.ops.segment_sum(
+                        c, w, num_segments=b.n_windows)
+                    if f.merge == "ksum":
+                        y = part - state[key + ":c"]
+                        t = state[key] + y
+                        # zero partials are exact no-ops: without the
+                        # where, the float32 (s, c) rotation would keep
+                        # perturbing rows of already-CLOSED windows,
+                        # breaking the byte-identity between rows
+                        # flushed mid-job and the job-end recompute
+                        zero = part == 0
+                        new[key + ":c"] = jnp.where(
+                            zero, state[key + ":c"],
+                            (t - state[key]) - y)
+                        new[key] = jnp.where(zero, state[key], t)
+                    else:
+                        new[key] = state[key] + part
+                elif f.merge == "min":
+                    new[key] = jnp.minimum(state[key], jax.ops.segment_min(
+                        c, w, num_segments=b.n_windows))
+                else:
+                    new[key] = jnp.maximum(state[key], jax.ops.segment_max(
+                        c, w, num_segments=b.n_windows))
         new["__live__"] = state["__live__"] \
             + jnp.sum(mask.astype(jnp.int32))
         return new
@@ -196,46 +296,102 @@ def compile_agg_update(specs: tuple[FeatureSpec, ...], mesh: Mesh | None,
 
     shard = NamedSharding(mesh, P(data_axes))
     rep = NamedSharding(mesh, P())
-    return jax.jit(update, in_shardings=(rep, shard, shard),
+    return jax.jit(update, in_shardings=(rep, shard, shard, shard),
                    out_shardings=rep, **kw)
 
 
-def _init_agg_state(specs, m, p, shapes, resumed):
-    """Device-resident accumulator, seeded from committed state.
+_STATE_DTYPES = {"float32": jnp.float32, "int32": jnp.int32}
 
-    Each aggregate carries a Kahan compensation term under the
-    engine-internal key ``"__c:" + name`` (the ``__`` prefix marks keys
-    sinks must persist opaquely); both halves ride through commit/resume
-    so a resumed accumulation is bitwise-identical to an uninterrupted
-    one (pre-compensation cursors simply resume with zero compensation).
+
+def _init_reduce_state(bindings, resumed):
+    """Device-resident multi-window carry, seeded from committed state.
+
+    Every state field (including ksum compensations under ``:c`` keys)
+    rides through commit/resume verbatim, so a resumed accumulation is
+    bitwise-identical to an uninterrupted one.  A cursor whose aggregate
+    keys do not exactly match the selected reductions is refused — a
+    silent partial restore would publish wrong windows/aggregates.
     """
-    agg_specs = [s for s in specs if s.aggregate is not None]
     state = {}
-    for s in agg_specs:
-        shape = s.aggregate.partial_shape(m, p) \
-            if s.aggregate.partial_shape else shapes[s.name]
-        state[s.name] = jnp.zeros(shape, jnp.float32)
-        state["__c:" + s.name] = jnp.zeros(shape, jnp.float32)
+    for b in bindings:
+        for f in b.fields:
+            key = _sk(b, f.name)
+            shape = (b.n_windows,) + tuple(f.shape)
+            state[key] = jnp.full(shape, f.init, _STATE_DTYPES[f.dtype])
+            if f.merge == "ksum":
+                state[key + ":c"] = jnp.zeros(shape, jnp.float32)
     state["__live__"] = jnp.zeros((), jnp.int32)
     if resumed is not None:
         prev_agg, prev_live = resumed
+        unknown = sorted(set(prev_agg) - set(state))
+        missing = sorted(set(state) - set(prev_agg) - {"__live__"})
+        if unknown or missing:
+            raise ValueError(
+                f"cannot resume: committed aggregate state does not "
+                f"match the selected reductions (stale keys {unknown}, "
+                f"absent keys {missing}) — the feature/reduction/window "
+                f"set changed since the cursor was written, or the store "
+                f"predates the windowed-reduction layout; use a fresh "
+                f"store directory")
         state["__live__"] = jnp.asarray(int(prev_live), jnp.int32)
         for name, total in prev_agg.items():
-            if name in state:
-                state[name] = jnp.asarray(total, jnp.float32)
+            total = np.asarray(total)
+            if total.shape != state[name].shape:
+                raise ValueError(
+                    f"cannot resume: committed aggregate {name!r} has "
+                    f"shape {total.shape}, expected {state[name].shape} "
+                    f"(window resolution or params changed since the "
+                    f"cursor was written); use a fresh store directory")
+            state[name] = jnp.asarray(total, state[name].dtype)
     return state
+
+
+def _finalize_rows(b: ReductionBinding, host_state: dict,
+                   lo: int, hi: int) -> np.ndarray:
+    """Finalize window rows [lo, hi) of one binding on the host.
+
+    The float32 carry is widened to float64 (exact) and ksum fields are
+    compensation-corrected before ``finalize`` sees them, so mid-job
+    flushes and the job-end pass produce byte-identical rows from the
+    same committed state.
+    """
+    st = {}
+    for f in b.fields:
+        key = _sk(b, f.name)
+        arr = np.asarray(host_state[key], np.float64)[lo:hi]
+        if f.merge == "ksum":
+            arr = arr - np.asarray(host_state[key + ":c"],
+                                   np.float64)[lo:hi]
+        st[f.name] = arr
+    return np.asarray(b.red.finalize(st))
+
+
+def _closed_windows(edges: np.ndarray, cursor: int) -> int:
+    """How many leading windows lie entirely below the commit cursor."""
+    return int(np.searchsorted(edges[1:], cursor, side="right"))
 
 
 def run_job(m: DatasetManifest, p: DepamParams, specs: list[FeatureSpec],
             source: Source, sink: Sink, mesh: Mesh | None,
             data_axes: tuple[str, ...], pl_: ShardPlan,
             use_kernels: bool, max_steps: int | None,
-            options: ExecOptions | None = None):
+            options: ExecOptions | None = None,
+            window: Window | None = None):
     """Drive the job over plan ``pl_``; resumable when the sink is.
-    Returns (features, epoch, n_records, plan) — see job.JobResult."""
+
+    ``window`` is the job's time resolution: every ``job``-window
+    reduction accumulates at it (epoch — one window — when None).
+    Returns (features, epoch, windows, window_edges, n_records, plan) —
+    see job.JobResult.
+    """
     options = options or ExecOptions()
     source = source.bind(m, p)
-    shapes = {s.name: tuple(s.shape(m, p)) for s in specs}
+    shapes = {s.name: tuple(s.shape(m, p)) for s in specs
+              if s.shape is not None}
+
+    bindings, wins = resolve_bindings(specs, m, p, window)
+    windowed = tuple(b for b in bindings if not b.to_epoch)
+    edges = {b.out_name: wins[b.wkey].edges(m) for b in windowed}
 
     raw = not source.device_synth and source.payload_dtype == "int16"
     donate_payload = options.donate and not source.device_synth
@@ -243,17 +399,41 @@ def run_job(m: DatasetManifest, p: DepamParams, specs: list[FeatureSpec],
     step_fn = compile_step(tuple(specs), m, p, mesh, data_axes,
                            use_kernels, source.device_synth,
                            donate_payload, source.payload_dtype)
-    agg_fn = compile_agg_update(tuple(specs), mesh, data_axes,
-                                donate_carry)
+    agg_fn = compile_reduce_update(bindings, mesh, data_axes,
+                                   donate_carry)
 
     sink.open(m, p, shapes, pl_)
+    if windowed:
+        sink.open_windows({
+            b.out_name: (b.n_windows,) + tuple(b.red.out_shape(m, p))
+            for b in windowed})
     start_step, resumed = sink.resume_state()
-    agg_state = _init_agg_state(specs, m, p, shapes, resumed)
+    agg_state = _init_reduce_state(bindings, resumed)
 
     n_steps = pl_.n_steps if max_steps is None \
         else min(pl_.n_steps, max_steps)
 
+    # Windows already flushed durably: everything closed below the
+    # committed cursor (their rows landed before that commit).
+    start_cursor = pl_.cursor_after(start_step - 1) if start_step > 0 \
+        else pl_.start
+    flushed = {b.out_name: _closed_windows(edges[b.out_name], start_cursor)
+               if start_step > 0 else 0
+               for b in windowed}
+
     inflight: collections.deque = collections.deque()
+
+    def flush_closed(commit_state, cursor):
+        """Finalize + write every window the cursor just closed, BEFORE
+        the commit that makes the cursor durable covers them."""
+        for b in windowed:
+            closed = _closed_windows(edges[b.out_name], cursor)
+            if closed > flushed[b.out_name]:
+                rows = _finalize_rows(
+                    b, commit_state, flushed[b.out_name], closed)
+                sink.write_windows(b.out_name, flushed[b.out_name],
+                                   rows.astype(np.float32))
+                flushed[b.out_name] = closed
 
     def drain_one():
         """Materialize the oldest in-flight step into the sink."""
@@ -267,19 +447,26 @@ def run_job(m: DatasetManifest, p: DepamParams, specs: list[FeatureSpec],
             for name in shapes}
         sink.write(step, sel, values)
         if commit_state is not None:
-            agg_host = {k: np.asarray(v, np.float64)
+            # carry persisted in its NATIVE dtypes (float32 / int32):
+            # resume casts losslessly, _finalize_rows widens to float64
+            # itself, and the commit sidecar stays state-sized
+            agg_host = {k: np.asarray(v)
                         for k, v in commit_state.items()
                         if k != "__live__"}
+            flush_closed(agg_host, pl_.cursor_after(step))
             sink.commit(pl_, step, agg_host,
                         float(commit_state["__live__"]))
 
     stream = None if source.device_synth \
         else source.stream(pl_, start_step, n_steps)
+    windows_out: dict[str, np.ndarray] = {}
     try:
         for step in range(start_step, n_steps):
             idx = pl_.step_indices(step)
             mask = pl_.step_mask(step)
             dmask = jnp.asarray(mask)
+            wids = {k: jnp.asarray(w.ids(idx, m))
+                    for k, w in wins.items()}
             if source.device_synth:
                 out = step_fn(jnp.asarray(idx, jnp.int32), dmask)
             elif raw:
@@ -298,10 +485,11 @@ def run_job(m: DatasetManifest, p: DepamParams, specs: list[FeatureSpec],
             else:
                 payload = jnp.asarray(next(stream), jnp.float32)
                 out = step_fn(payload, dmask)
-            agg_state = agg_fn(agg_state, out, dmask)
-            # start the device→host transfers now; block in drain_one
-            for v in out.values():
-                v.copy_to_host_async()
+            agg_state = agg_fn(agg_state, out, dmask, wids)
+            # start the device→host transfers now; block in drain_one —
+            # reduction-only values never cross back to the host
+            for name in shapes:
+                out[name].copy_to_host_async()
             commit_state = agg_state if sink.wants_commit else None
             if commit_state is not None:
                 for v in commit_state.values():
@@ -311,19 +499,32 @@ def run_job(m: DatasetManifest, p: DepamParams, specs: list[FeatureSpec],
                 drain_one()
         while inflight:
             drain_one()
+
+        # Job end: one carry transfer, then finalize every window (the
+        # trailing partial ones included) and flush whatever the commit
+        # boundaries have not already written.  Rows flushed mid-job
+        # came from the same committed float32 state, so this pass is
+        # byte-identical to them.
+        host_state = {k: np.asarray(v) for k, v in agg_state.items()}
+        for b in windowed:
+            rows = _finalize_rows(b, host_state, 0, b.n_windows)
+            windows_out[b.out_name] = rows.astype(np.float32)
+            if flushed[b.out_name] < b.n_windows:
+                sink.write_windows(
+                    b.out_name, flushed[b.out_name],
+                    windows_out[b.out_name][flushed[b.out_name]:])
+                flushed[b.out_name] = b.n_windows
     finally:
         if stream is not None:
             stream.close()
         source.close()
         sink.close()
 
-    live = int(agg_state.pop("__live__"))    # the one job-end transfer
+    live = int(host_state["__live__"])
     epoch = {}
-    for s in specs:
-        if s.aggregate is None:
-            continue
-        # best estimate: sum minus the residual the compensation holds
-        total = np.asarray(agg_state[s.name], np.float64) \
-            - np.asarray(agg_state["__c:" + s.name], np.float64)
-        epoch[s.aggregate.out_name] = s.aggregate.finalize(total, live)
-    return sink.result(), epoch, live, pl_
+    for b in bindings:
+        if b.to_epoch:
+            # single-window reductions publish squeezed, in float64
+            epoch[b.out_name] = _finalize_rows(b, host_state, 0, 1)[0]
+    window_edges = {name: edges[name].copy() for name in windows_out}
+    return (sink.result(), epoch, windows_out, window_edges, live, pl_)

@@ -3,7 +3,9 @@
 A :class:`FeatureSpec` is the unit of extensibility.  It declares
 
   * ``shape(manifest, params)`` — the per-record trailing shape, which is
-    all the store needs to lay out its memmap;
+    all the store needs to lay out its memmap; ``None`` marks a
+    *reduction-only* feature (``ltsa``/``spd`` below): its per-chunk
+    value feeds reductions but is never stored per record;
   * ``compute(ctx)`` — a traceable function from the shared
     :class:`FeatureContext` (records + cached Welch / frame-PSD
     intermediates) to a ``(batch, *shape)`` array;
@@ -11,12 +13,16 @@ A :class:`FeatureSpec` is the unit of extensibility.  It declares
     end (0 for linear power, -inf for dB levels);
   * optional ``setup(manifest, params)`` — host-side constants (e.g. the
     TOL band matrix) baked into the jitted step;
-  * optional ``aggregate`` — a named epoch-level reduction (the
-    pipeline's single collective).
+  * optional ``reductions`` — :class:`Reduction` instances turning the
+    per-record value into windowed soundscape products (LTSA panels,
+    SPD histograms, spectrum extrema) or whole-epoch aggregates, all
+    accumulated in the engine's on-device multi-window carry.
 
 Because every selected spec computes from the SAME context inside ONE
 jitted step, features compose in a single pass over the data and share
-intermediates: selecting ("welch", "spl", "tol") runs the Welch PSD once.
+intermediates: selecting ("welch", "spl", "tol") runs the Welch PSD once,
+and ("welch", "ltsa", "spd") reduces LTSA/SPD from the same Welch /
+frame-PSD traces that produce the per-record arrays.
 
 Registering a new feature requires no engine, store, or CLI changes —
 ``percentiles`` below is the proof: pypam-style per-record spectrum
@@ -27,6 +33,9 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Sequence
 
+import numpy as np
+
+import jax
 import jax.numpy as jnp
 
 from repro.core import spectra
@@ -106,23 +115,160 @@ class FeatureContext:
         return self._psd("frame_psd", ops.frame_psd, spectra.frame_psd)
 
 
-@dataclasses.dataclass(frozen=True)
-class EpochAggregate:
-    """Epoch-level reduction over all live records (one collective).
+# ---------------------------------------------------------------------------
+# Windows & reductions — the multi-resolution reduction protocol.
+# ---------------------------------------------------------------------------
 
-    ``local(value, mask)`` reduces a step's masked feature values to a
-    partial of shape ``partial_shape`` (defaults to the feature shape);
-    the engine psums partials across the mesh and accumulates them in
-    float64 on the host.  ``finalize(total, live)`` maps the accumulated
-    partial + live-record count to the epoch value published under
-    ``out_name`` in ``JobResult.epoch``.
+@dataclasses.dataclass(frozen=True)
+class Window:
+    """A named partition of the record index space into time windows.
+
+    Three concrete kinds plus one late-binding sentinel:
+
+      * ``records`` — fixed-size windows of ``records`` consecutive
+        records (the last window may be partial);
+      * ``file`` — one window per manifest file (hourly/daily products
+        when files are deployments' natural chunks);
+      * ``epoch`` — the degenerate single window covering everything;
+      * ``job`` — resolved by the engine to whatever the job builder's
+        ``.window(...)`` selected (``epoch`` when unset).  Built-in
+        windowed reductions declare this, so ONE registry entry serves
+        every resolution.
+
+    Windows follow the plan's global record order, so they close as the
+    committed cursor advances — that is what lets the engine flush
+    finished windows to the sink mid-job.
+    """
+
+    kind: str                      # "epoch" | "records" | "file" | "job"
+    records: int | None = None
+
+    def __post_init__(self):
+        if self.kind not in ("epoch", "records", "file", "job"):
+            raise ValueError(f"unknown window kind {self.kind!r}")
+        if (self.kind == "records") != (self.records is not None):
+            raise ValueError("records= is required for (exactly) the "
+                             "'records' window kind")
+        if self.records is not None and self.records < 1:
+            raise ValueError(f"window records must be >= 1, "
+                             f"got {self.records}")
+
+    @property
+    def key(self) -> str:
+        """Stable name, e.g. ``records:512`` — used in error messages
+        and as the engine's window-id routing key."""
+        return f"records:{self.records}" if self.kind == "records" \
+            else self.kind
+
+    def edges(self, m: DatasetManifest) -> np.ndarray:
+        """Record-offset boundaries, shape (n_windows + 1,): window ``i``
+        covers global records [edges[i], edges[i+1])."""
+        if self.kind == "epoch":
+            return np.asarray([0, m.n_records], np.int64)
+        if self.kind == "records":
+            n = int(np.ceil(max(m.n_records, 1) / self.records))
+            e = np.arange(n + 1, dtype=np.int64) * self.records
+            e[-1] = m.n_records
+            return e
+        if self.kind == "file":
+            return np.asarray(m.file_offsets, np.int64)
+        raise ValueError("the 'job' window must be resolved by the "
+                         "engine before use")
+
+    def n_windows(self, m: DatasetManifest) -> int:
+        return len(self.edges(m)) - 1
+
+    def ids(self, indices: np.ndarray, m: DatasetManifest) -> np.ndarray:
+        """Global record indices -> window ids (host-side, per step).
+        Padding indices beyond the manifest clamp to the last window —
+        their contributions are masked to the identity anyway."""
+        idx = np.minimum(np.asarray(indices, np.int64),
+                         max(m.n_records - 1, 0))
+        if self.kind == "epoch":
+            return np.zeros(idx.shape, np.int32)
+        if self.kind == "records":
+            return (idx // self.records).astype(np.int32)
+        e = self.edges(m)
+        return (np.searchsorted(e, idx, side="right") - 1).astype(np.int32)
+
+
+EPOCH_WINDOW = Window("epoch")
+JOB_WINDOW = Window("job")
+
+
+@dataclasses.dataclass(frozen=True)
+class StateField:
+    """One named array in a reduction's per-window carry state.
+
+    ``merge`` names the associative combine the engine applies — within
+    a step (a segment reduce over the records that hit each window),
+    across steps (carry ⊕ step partial), and across the mesh (the
+    collective a replicated out-sharding inserts):
+
+      * ``"sum"`` — plain addition;
+      * ``"ksum"`` — Kahan-compensated float32 addition: the engine
+        carries a companion compensation array under ``<key>:c`` so
+        accumulation error stays O(eps) at any step count, and hands
+        ``finalize`` the already-corrected sum;
+      * ``"min"`` / ``"max"`` — elementwise extrema.
+
+    ``init`` is the merge identity (0 for sums, ±inf for extrema);
+    ``dtype`` is ``"float32"`` or ``"int32"`` (exact counts).
+    """
+
+    name: str
+    shape: tuple[int, ...] = ()
+    merge: str = "sum"
+    dtype: str = "float32"
+    init: float = 0.0
+
+    def __post_init__(self):
+        if self.merge not in ("sum", "ksum", "min", "max"):
+            raise ValueError(f"unknown merge op {self.merge!r}")
+        if self.dtype not in ("float32", "int32"):
+            raise ValueError(f"unsupported state dtype {self.dtype!r}")
+        if self.merge == "ksum" and self.dtype != "float32":
+            raise ValueError("ksum compensation is float32-only")
+
+
+@dataclasses.dataclass(frozen=True)
+class Reduction:
+    """A windowed (or epoch) reduction over a feature's per-record value.
+
+    The init/update/merge/finalize protocol:
+
+      * ``init(manifest, params)`` — declares the per-window carry
+        layout as a tuple of :class:`StateField` (shape, identity, and
+        the associative *merge* op per field);
+      * ``update(value, mask)`` — traceable; maps the feature's flat
+        ``(batch, ...)`` step value + live-mask to per-record
+        contributions ``{field: (batch, *field.shape)}`` (masked slots
+        must contribute the field's identity);
+      * *merge* — declarative, per field (see :class:`StateField`): the
+        engine segment-reduces contributions into window slots and
+        merges them into the on-device carry, which also makes resumed
+        accumulation bitwise-exact (the carry rides commit state);
+      * ``finalize(state)`` — host-side, row-wise over windows: maps the
+        float64 copy of the carry (``ksum`` fields arrive
+        compensation-corrected) to the published
+        ``(n_windows, *out_shape)`` array.  Row-wise purity is what lets
+        the engine flush closed windows incrementally mid-job.
+
+    ``window`` is where the reduction accumulates: the module-level
+    :data:`JOB_WINDOW` (default — the job builder's ``.window(...)``
+    choice) or an explicit window such as :data:`EPOCH_WINDOW`
+    (``welch``'s ``mean_welch`` below, published via ``JobResult.epoch``
+    with the single-window axis squeezed; everything else lands in
+    ``JobResult.windows``).
     """
 
     out_name: str
-    local: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
-    finalize: Callable
-    partial_shape: Callable[[DatasetManifest, DepamParams],
-                            tuple[int, ...]] | None = None
+    init: Callable[[DatasetManifest, DepamParams], tuple[StateField, ...]]
+    update: Callable[[jnp.ndarray, jnp.ndarray], dict[str, jnp.ndarray]]
+    finalize: Callable[[dict[str, np.ndarray]], np.ndarray]
+    out_shape: Callable[[DatasetManifest, DepamParams], tuple[int, ...]]
+    window: Window = JOB_WINDOW
+    doc: str = ""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -130,11 +276,12 @@ class FeatureSpec:
     """A registered feature workload (see module docstring)."""
 
     name: str
-    shape: Callable[[DatasetManifest, DepamParams], tuple[int, ...]]
+    shape: Callable[[DatasetManifest, DepamParams],
+                    tuple[int, ...]] | None
     compute: Callable[[FeatureContext], jnp.ndarray]
     fill: float = 0.0
     setup: Callable[[DatasetManifest, DepamParams], dict] | None = None
-    aggregate: EpochAggregate | None = None
+    reductions: tuple[Reduction, ...] = ()
     doc: str = ""
 
 
@@ -184,9 +331,35 @@ def resolve_features(feats: Sequence[str | FeatureSpec]) -> list[FeatureSpec]:
 # Built-in features — the paper's workload, as registry entries.
 # ---------------------------------------------------------------------------
 
-def _welch_partial(value: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
-    return jnp.sum(value * mask[..., None],
-                   axis=tuple(range(value.ndim - 1)))
+def _finalize_mean(state: dict[str, np.ndarray]) -> np.ndarray:
+    """sum/count per window; windows that never saw a record (possible
+    under per-file windows with empty files) publish NaN, not 0."""
+    count = state["count"][..., None]
+    mean = state["sum"] / np.maximum(count, 1.0)
+    return np.where(count > 0, mean, np.nan)
+
+
+def mean_reduction(out_name: str, n_cols, *, window: Window = JOB_WINDOW,
+                   kahan: bool = False, doc: str = "") -> Reduction:
+    """Windowed mean of a ``(batch, n_cols)`` feature value.
+
+    ``n_cols`` is a ``(manifest, params) -> int`` callable (or an int).
+    ``kahan=True`` compensates the float32 sums (the whole-epoch mean
+    wants it; bounded windows usually don't need the extra state).
+    """
+    cols = n_cols if callable(n_cols) else (lambda m, p: n_cols)
+    return Reduction(
+        out_name=out_name,
+        init=lambda m, p: (
+            StateField("sum", (cols(m, p),),
+                       merge="ksum" if kahan else "sum"),
+            StateField("count", (), merge="sum", dtype="int32")),
+        update=lambda v, mask: {
+            "sum": v * mask[:, None].astype(v.dtype),
+            "count": mask.astype(jnp.int32)},
+        finalize=_finalize_mean,
+        out_shape=lambda m, p: (cols(m, p),),
+        window=window, doc=doc)
 
 
 register(FeatureSpec(
@@ -194,10 +367,10 @@ register(FeatureSpec(
     shape=lambda m, p: (p.n_bins,),
     compute=lambda ctx: ctx.welch,
     fill=0.0,
-    aggregate=EpochAggregate(
-        out_name="mean_welch",
-        local=_welch_partial,
-        finalize=lambda total, live: total / max(live, 1.0)),
+    reductions=(mean_reduction(
+        "mean_welch", lambda m, p: p.n_bins, window=EPOCH_WINDOW,
+        kahan=True,
+        doc="Epoch mean Welch PSD (the paper's final join)."),),
     doc="Per-record Welch PSD (linear, scipy 'density' scaling)."))
 
 
@@ -240,3 +413,117 @@ register(FeatureSpec(
     compute=_percentiles_compute,
     fill=-float("inf"),
     doc="Spectrum percentile levels per record (dB), pypam-style."))
+
+
+# ---------------------------------------------------------------------------
+# Windowed soundscape products — the multi-resolution workloads (all
+# reduction-only: shape=None, nothing stored per record).  They compute
+# from the SAME cached Welch / frame-PSD intermediates as welch/spl/tol/
+# percentiles, so adding them to a job costs one reduction, not a second
+# pass over the data.
+# ---------------------------------------------------------------------------
+
+register(FeatureSpec(
+    name="ltsa",
+    shape=None,
+    compute=lambda ctx: ctx.welch,
+    reductions=(mean_reduction(
+        "ltsa", lambda m, p: p.n_bins,
+        doc="Windowed mean Welch PSD — the long-term spectral average "
+            "panel (linear; 10*log10 for the dB plot)."),),
+    doc="LTSA: mean Welch PSD per time window (the paper's long-term "
+        "averaged soundscape representation)."))
+
+
+# SPD histogram layout (pypam compute_spd): dB bins of width SPD_DB_STEP
+# spanning [SPD_DB_MIN, SPD_DB_MAX), per frequency bin, per window.
+# Out-of-range frames are dropped, exactly like np.histogram's range=.
+SPD_DB_MIN = -120.0
+SPD_DB_MAX = 60.0
+SPD_DB_STEP = 3.0
+SPD_N_DB = int(round((SPD_DB_MAX - SPD_DB_MIN) / SPD_DB_STEP))
+
+
+def _spd_db(ctx: FeatureContext) -> jnp.ndarray:
+    p = ctx.params
+    return 10.0 * jnp.log10(jnp.maximum(ctx.frame_psd, 1e-30)) + p.gain_db
+
+
+def _spd_update(db: jnp.ndarray, mask: jnp.ndarray) -> dict:
+    """Per-record frame-count histogram: (batch, n_frames, n_bins) dB ->
+    {counts: (batch, n_bins, SPD_N_DB) int32}.  One flat segment-sum per
+    record instead of a dense one-hot, so memory stays O(n_frames*n_bins)
+    even for the paper's 60 s records."""
+    n_bins = db.shape[-1]
+    freq = jnp.broadcast_to(jnp.arange(n_bins), db.shape)
+    dbin = jnp.floor((db - SPD_DB_MIN) / SPD_DB_STEP).astype(jnp.int32)
+    valid = ((db >= SPD_DB_MIN) & (db < SPD_DB_MAX)
+             & mask[:, None, None])
+    flat_ids = jnp.where(valid, freq * SPD_N_DB + dbin, n_bins * SPD_N_DB)
+
+    def one_record(ids):
+        h = jax.ops.segment_sum(
+            jnp.ones(ids.size, jnp.int32), ids.reshape(-1),
+            num_segments=n_bins * SPD_N_DB + 1)
+        return h[:-1].reshape(n_bins, SPD_N_DB)
+
+    return {"counts": jax.vmap(one_record)(flat_ids)}
+
+
+def _spd_finalize(state: dict[str, np.ndarray]) -> np.ndarray:
+    """Counts -> empirical probability density per (window, freq bin):
+    rows integrate to 1 over dB (np.histogram density=True semantics,
+    normalized by the in-range frame count per frequency bin)."""
+    counts = state["counts"]
+    total = counts.sum(axis=-1, keepdims=True)
+    return counts / np.where(total > 0, total * SPD_DB_STEP, 1.0)
+
+
+register(FeatureSpec(
+    name="spd",
+    shape=None,
+    compute=_spd_db,
+    reductions=(Reduction(
+        out_name="spd",
+        init=lambda m, p: (
+            StateField("counts", (p.n_bins, SPD_N_DB), dtype="int32"),),
+        update=_spd_update,
+        finalize=_spd_finalize,
+        out_shape=lambda m, p: (p.n_bins, SPD_N_DB),
+        doc="Spectral probability density: per-window histogram of the "
+            "frame-PSD dB levels, per frequency bin (pypam "
+            "compute_spd)."),),
+    doc="SPD: windowed dB-histogram of the frame spectrogram, "
+        "normalized to a probability density per frequency bin."))
+
+
+def _extremum_reduction(out_name: str, op: str) -> Reduction:
+    sign = np.inf if op == "min" else -np.inf
+
+    def update(v, mask, _sign=np.float32(sign)):
+        return {op: jnp.where(mask[:, None], v, _sign),
+                "count": mask.astype(jnp.int32)}
+
+    def finalize(state):
+        count = state["count"][..., None]
+        return np.where(count > 0, state[op], np.nan)
+
+    return Reduction(
+        out_name=out_name,
+        init=lambda m, p: (
+            StateField(op, (p.n_bins,), merge=op, init=sign),
+            StateField("count", (), merge="sum", dtype="int32")),
+        update=update,
+        finalize=finalize,
+        out_shape=lambda m, p: (p.n_bins,),
+        doc=f"Windowed {op} Welch spectrum.")
+
+
+register(FeatureSpec(
+    name="minmax",
+    shape=None,
+    compute=lambda ctx: ctx.welch,
+    reductions=(_extremum_reduction("min_welch", "min"),
+                _extremum_reduction("max_welch", "max")),
+    doc="Windowed min/max Welch spectrum per frequency bin (soundscape "
+        "envelope statistics)."))

@@ -5,7 +5,8 @@
     from repro import api
 
     result = (api.job(manifest, params)
-                 .features("welch", "spl", "tol", "percentiles")
+                 .features("welch", "spl", "ltsa", "spd")
+                 .window(records=64)  # optional: reduction resolution
                  .on(mesh)            # optional: data-parallel mesh
                  .source("/wavs")     # optional: default device synthesis
                  .to("/tmp/depam")    # optional: default in-memory
@@ -15,8 +16,10 @@
                  .run())
 
 Every setter returns the job, so configurations read as one expression;
-``run()`` compiles all selected features into a single jitted step and
-drives the sharded plan to completion (resuming if the sink supports it).
+``run()`` validates the configuration (incompatible source/knob combos
+raise a ValueError naming the conflict before any IO or compilation),
+compiles all selected features into a single jitted step, and drives
+the sharded plan to completion (resuming if the sink supports it).
 """
 from __future__ import annotations
 
@@ -28,7 +31,7 @@ from jax.sharding import Mesh
 from repro.core.manifest import DatasetManifest, ShardPlan, plan
 from repro.core.params import DepamParams
 from . import engine
-from .features import FeatureSpec, resolve_features
+from .features import EPOCH_WINDOW, FeatureSpec, Window, resolve_features
 from .sinks import AsyncSink, Sink, as_sink
 from .sources import PrefetchSource, Source, as_source
 
@@ -37,24 +40,42 @@ from .sources import PrefetchSource, Source, as_source
 class JobResult:
     """Outputs of one SoundscapeJob run.
 
-    ``features`` maps feature name -> (n_records, *shape) array (None
-    for streaming sinks); ``epoch`` holds aggregate outputs such as
-    ``mean_welch``.  ``result[name]`` looks up either.
+    Three output namespaces, one per time resolution:
+
+      * ``features`` — feature name -> (n_records, *shape) per-record
+        array (None for streaming sinks);
+      * ``windows`` — reduction output -> (n_windows, *shape) windowed
+        array (LTSA panels, SPD histograms, spectrum extrema), with
+        ``window_edges[name]`` giving the (n_windows + 1,) record-offset
+        boundaries for the time axis;
+      * ``epoch`` — whole-epoch aggregates such as ``mean_welch``.
+
+    ``result[name]`` looks up all three; a name present in more than
+    one namespace raises instead of silently preferring one.
     """
 
     features: dict[str, np.ndarray] | None
     epoch: dict[str, np.ndarray]
+    windows: dict[str, np.ndarray]
+    window_edges: dict[str, np.ndarray]
     n_records: int
     plan: ShardPlan
 
     def __getitem__(self, name: str):
-        if self.features is not None and name in self.features:
-            return self.features[name]
-        if name in self.epoch:
-            return self.epoch[name]
+        spaces = [("features", self.features or {}),
+                  ("epoch", self.epoch), ("windows", self.windows)]
+        hits = [(label, d[name]) for label, d in spaces if name in d]
+        if len(hits) > 1:
+            raise KeyError(
+                f"{name!r} is ambiguous: present in "
+                f"{' and '.join(label for label, _ in hits)}; read "
+                f"result.<namespace>[{name!r}] explicitly")
+        if hits:
+            return hits[0][1]
         raise KeyError(
-            f"{name!r} not in features "
-            f"{sorted(self.features or ())} or epoch {sorted(self.epoch)}")
+            f"{name!r} not in features {sorted(self.features or ())}, "
+            f"epoch {sorted(self.epoch)}, or windows "
+            f"{sorted(self.windows)}")
 
 
 class SoundscapeJob:
@@ -72,6 +93,7 @@ class SoundscapeJob:
         self._use_kernels = True
         self._max_steps: int | None = None
         self._payload_dtype: str | None = None
+        self._window: Window = EPOCH_WINDOW
         self._exec = engine.ExecOptions()
 
     def features(self, *feats: str | FeatureSpec) -> "SoundscapeJob":
@@ -102,7 +124,31 @@ class SoundscapeJob:
 
     def chunk(self, records: int) -> "SoundscapeJob":
         """Records per shard per step (the chunk size)."""
+        if int(records) < 1:
+            raise ValueError(f"chunk must be >= 1, got {records}")
         self._chunk = int(records)
+        return self
+
+    def window(self, records: int | None = None, *,
+               per_file: bool = False) -> "SoundscapeJob":
+        """Time resolution for the job's windowed reductions
+        (``ltsa``/``spd``/``minmax`` and any custom ``JOB_WINDOW``
+        reduction): ``records=N`` for fixed windows of N consecutive
+        records, ``per_file=True`` for one window per manifest file.
+        Calling with neither resets to the default — the whole epoch as
+        one window.  Explicit-window reductions (e.g. ``welch``'s
+        epoch ``mean_welch``) are unaffected.
+        """
+        if records is not None and per_file:
+            raise ValueError(
+                "window(records=...) and window(per_file=True) are "
+                "mutually exclusive — pick one resolution")
+        if records is not None:
+            self._window = Window("records", records=int(records))
+        elif per_file:
+            self._window = Window("file")
+        else:
+            self._window = EPOCH_WINDOW
         return self
 
     def kernels(self, enabled: bool) -> "SoundscapeJob":
@@ -166,9 +212,41 @@ class SoundscapeJob:
         the sink's committed progress against this job's plan."""
         return as_sink(self._sink).committed_steps(self._plan())
 
+    def _validate(self, specs: list[FeatureSpec],
+                  source: Source) -> None:
+        """Reject incompatible source/knob combinations up front, with
+        the conflict named — not three layers down in the engine."""
+        if self._payload_dtype == "int16" and source.device_synth:
+            raise ValueError(
+                ".payload('int16') conflicts with the device-synthesized "
+                "source: synthesized records are regenerated on-device "
+                "from int32 indices and never cross the host→device "
+                "link, so there is no PCM payload to ship — drop "
+                ".payload(...) or feed the job from wav files / a raw "
+                "reader (.source(...))")
+        if self._window.kind == "file" and self._m.n_files == 0:
+            raise ValueError(
+                ".window(per_file=True) needs a manifest with files; "
+                "this manifest has none")
+        # resolve the reductions now (pure and cheap): duplicate output
+        # names raise here, before any source IO or compilation
+        engine.resolve_bindings(specs, self._m, self._p, self._window)
+        # a reduction output must not shadow a stored per-record
+        # feature — JobResult[name] would be ambiguous
+        stored = {s.name for s in specs if s.shape is not None}
+        for s in specs:
+            for red in s.reductions:
+                if red.out_name in stored:
+                    raise ValueError(
+                        f"reduction output {red.out_name!r} (from "
+                        f"feature {s.name!r}) collides with the stored "
+                        f"per-record feature of the same name — rename "
+                        f"the reduction output")
+
     def run(self) -> JobResult:
         specs = resolve_features(self._features)
         source: Source = as_source(self._source)
+        self._validate(specs, source)
         if self._payload_dtype is not None:
             source = source.with_payload(self._payload_dtype)
         if self._exec.prefetch_depth > 0 and not source.device_synth \
@@ -177,12 +255,13 @@ class SoundscapeJob:
         sink: Sink = as_sink(self._sink)
         if self._exec.inflight > 0 and not isinstance(sink, AsyncSink):
             sink = AsyncSink(sink, queue_size=self._exec.queue_size)
-        features, epoch, n_records, pl_ = engine.run_job(
+        features, epoch, windows, edges, n_records, pl_ = engine.run_job(
             self._m, self._p, specs, source, sink, self._mesh,
             self._data_axes, self._plan(), self._use_kernels,
-            self._max_steps, self._exec)
-        return JobResult(features=features, epoch=epoch,
-                         n_records=n_records, plan=pl_)
+            self._max_steps, self._exec, self._window)
+        return JobResult(features=features, epoch=epoch, windows=windows,
+                         window_edges=edges, n_records=n_records,
+                         plan=pl_)
 
 
 def job(manifest: DatasetManifest, params: DepamParams) -> SoundscapeJob:

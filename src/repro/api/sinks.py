@@ -8,15 +8,27 @@ The engine hands every sink the same three things:
     one step: ``indices`` are global record ids, ``values`` maps feature
     name to ``(len(indices), *shape)`` arrays;
   * ``commit(plan, step, agg, live)`` — called after each step with the
-    accumulated epoch-aggregate state (fault-tolerance hook).  ``agg``
-    maps feature name -> partial sum, PLUS engine-internal entries whose
-    keys start with ``__`` (e.g. ``__c:welch``, the Kahan compensation
-    that makes resumed accumulation bitwise-exact); sinks must persist
-    the mapping opaquely and never interpret the ``__``-prefixed keys.
+    accumulated reduction-carry state (fault-tolerance hook).  ``agg``
+    maps engine-internal ``__``-prefixed keys to partial state arrays
+    (``__r:<window>:<out>:<field>``, e.g. ``__r:epoch:mean_welch:sum``
+    and its ``:c`` Kahan companion, or a partially-filled multi-window
+    ``__r:records:64:ltsa:sum``); sinks must persist the mapping
+    opaquely and never interpret the keys — riding them verbatim is
+    what makes resumed accumulation bitwise-exact.
+
+Windowed reduction outputs (LTSA panels, SPD histograms, spectrum
+extrema) arrive through a parallel pair of hooks: ``open_windows``
+declares the ``{output: (n_windows, *shape)}`` layout right after
+``open``, and ``write_windows(name, start, values)`` delivers finalized
+window rows — closed windows stream in at commit boundaries, the
+trailing partial ones at job end.  Both default to no-ops, so sinks
+that only care about per-record features need no changes (the engine
+returns the windowed arrays in ``JobResult.windows`` regardless).
 
 The lifecycle contract (see ``docs/api.md``) is strict: ``open`` before
 anything else, ``write(step=k)`` before ``commit(step=k)``, steps in
-ascending order, and a commit makes *all* prior writes durable.
+ascending order, and a commit makes *all* prior writes durable —
+including the window rows flushed before it.
 :class:`AsyncSink` moves ``write``/``commit`` onto a bounded background
 writer thread while preserving exactly that ordering, so the driver can
 dispatch the next device step instead of blocking on sink IO.
@@ -62,6 +74,22 @@ class Sink:
     def write(self, step: int, indices: np.ndarray,
               values: dict[str, np.ndarray]) -> None:
         raise NotImplementedError
+
+    def open_windows(self, shapes: dict[str, tuple[int, ...]]) -> None:
+        """Windowed-output layout, ``{output: (n_windows, *shape)}`` —
+        called once right after ``open`` when the job has windowed
+        reductions.  Default: ignore (the engine still returns the
+        arrays in ``JobResult.windows``)."""
+        pass
+
+    def write_windows(self, name: str, start: int,
+                      values: np.ndarray) -> None:
+        """Finalized window rows ``[start, start + len(values))`` of
+        output ``name``.  Closed windows arrive at commit boundaries
+        (just before the commit that makes them durable), the trailing
+        partial ones at job end; rows are idempotent overwrites, in
+        ascending order within each output."""
+        pass
 
     def commit(self, plan: ShardPlan, step: int,
                agg: dict[str, np.ndarray], live: float) -> None:
@@ -111,6 +139,7 @@ class StoreSink(Sink):
     def __init__(self, store: FeatureStore | str):
         self.store = FeatureStore(store) if isinstance(store, str) else store
         self.arrays: dict[str, np.memmap] | None = None
+        self.window_arrays: dict[str, np.memmap] = {}
         self._plan: ShardPlan | None = None
 
     def open(self, m, p, shapes, plan):
@@ -130,7 +159,18 @@ class StoreSink(Sink):
                     f"(added after the store was written?); use a fresh "
                     f"store directory or drop them from the job")
         self.arrays = self.store.open_arrays(
-            {name: (m.n_records,) + shape for name, shape in shapes.items()})
+            {name: (m.n_records,) + shape for name, shape in shapes.items()},
+            extend=True)
+
+    def open_windows(self, shapes):
+        # Extends the store layout with one (n_windows, *shape) memmap
+        # per windowed output; a mid-window resume restores their
+        # content from the carry state the cursor committed, not from
+        # these arrays, so stale trailing rows are simply overwritten.
+        self.window_arrays = self.store.open_arrays(shapes, extend=True)
+
+    def write_windows(self, name, start, values):
+        self.window_arrays[name][start:start + len(values)] = values
 
     def resume_state(self):
         start = self.store.committed_steps(self._plan)
@@ -154,15 +194,30 @@ class StoreSink(Sink):
 
 class CallbackSink(Sink):
     """Streaming sink: ``fn(step, indices, values)`` per step, nothing
-    retained — the shape for live dashboards / downstream queues."""
+    retained — the shape for live dashboards / downstream queues.
+
+    ``on_windows(name, start, values)``, when given, additionally
+    streams finalized window rows (closed LTSA/SPD panels as the job
+    passes their boundary, the trailing partial ones at job end).
+    """
 
     wants_commit = False
 
-    def __init__(self, fn: Callable[[int, np.ndarray, dict], None]):
+    def __init__(self, fn: Callable[[int, np.ndarray, dict], None],
+                 on_windows: Callable[[str, int, np.ndarray],
+                                      None] | None = None):
         self.fn = fn
+        self.on_windows = on_windows
+        # mid-job window flushes ride commit boundaries; opt into them
+        # when the callback wants windows streamed as they close
+        self.wants_commit = on_windows is not None
 
     def write(self, step, indices, values):
         self.fn(step, indices, values)
+
+    def write_windows(self, name, start, values):
+        if self.on_windows is not None:
+            self.on_windows(name, start, values)
 
 
 class AsyncSink(Sink):
@@ -214,6 +269,8 @@ class AsyncSink(Sink):
                 try:
                     if op == "write":
                         self.inner.write(*args)
+                    elif op == "windows":
+                        self.inner.write_windows(*args)
                     else:
                         self.inner.commit(*args)
                 except BaseException as e:     # noqa: BLE001
@@ -244,6 +301,9 @@ class AsyncSink(Sink):
         self._error = None        # a fresh run starts with a clean slate
         self._ensure_worker()
 
+    def open_windows(self, shapes):
+        self.inner.open_windows(shapes)
+
     def resume_state(self):
         return self.inner.resume_state()
 
@@ -255,6 +315,13 @@ class AsyncSink(Sink):
     def write(self, step, indices, values):
         self._raise_pending()
         self._q.put(("write", (step, indices, values)))
+
+    def write_windows(self, name, start, values):
+        # rides the same FIFO, so a window row always lands before the
+        # commit that makes its cursor durable — crash semantics
+        # identical to the synchronous path
+        self._raise_pending()
+        self._q.put(("windows", (name, start, values)))
 
     def commit(self, plan, step, agg, live):
         self._raise_pending()

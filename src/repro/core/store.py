@@ -8,8 +8,10 @@ so a crash at any point leaves either the old or the new cursor — never
 a torn state.  On resume, the committed cursor tells the driver which
 plan steps to skip; any step that was in flight when the job died is
 recomputed (idempotent: the manifest is deterministic and writes are
-per-record).  Epoch-aggregate partial sums ride along in the cursor so
-aggregates also survive the crash.
+per-record).  The reduction carry (epoch aggregates AND partially
+filled window states) rides each commit as a binary ``agg-<cursor>.npz``
+sidecar referenced from the cursor, so aggregates and windowed products
+also survive the crash — bitwise.
 """
 from __future__ import annotations
 
@@ -36,32 +38,50 @@ class FeatureStore:
     def array_exists(self, name: str) -> bool:
         return os.path.exists(self._array_path(name))
 
-    def open_arrays(self, shapes: dict[str, tuple[int, ...]]
-                    ) -> dict[str, np.memmap]:
+    def open_arrays(self, shapes: dict[str, tuple[int, ...]], *,
+                    extend: bool = False) -> dict[str, np.memmap]:
         """Open (or create) one float32 memmap per named feature.
 
-        ``shapes`` are FULL array shapes including the n_records leading
-        dim.  Reopening an existing store validates the layout, so a
-        feature-set or parameter change on resume fails loudly instead
-        of writing through a stale layout.
+        ``shapes`` are FULL array shapes including the leading dim
+        (n_records for per-record features, n_windows for windowed
+        reduction outputs).  Reopening an existing store validates the
+        layout, so a feature-set or parameter change on resume fails
+        loudly instead of writing through a stale layout.
+
+        ``extend=True`` opens the named arrays *in addition to* whatever
+        this instance already holds (the windowed-output layout arrives
+        in a second call after the per-record one): overlapping names
+        are shape-validated against the open memmaps, new names are
+        opened/created, and only the requested names are returned.  The
+        default (``extend=False``) keeps the strict contract: the
+        requested layout must equal the cached one exactly.
         """
-        if self._arrays is not None:
+        want = {k: tuple(s) for k, s in shapes.items()}
+        if self._arrays is not None and not extend:
             cached = {k: tuple(a.shape) for k, a in self._arrays.items()}
-            want = {k: tuple(s) for k, s in shapes.items()}
             if cached != want:
                 raise ValueError(
                     f"store already opened with a different layout: "
                     f"open {cached}, requested {want}")
             return self._arrays
+        opened = self._arrays if self._arrays is not None else {}
         out = {}
-        for name, shape in shapes.items():
+        for name, shape in want.items():
+            if name in opened:
+                if tuple(opened[name].shape) != shape:
+                    raise ValueError(
+                        f"store already opened with a different layout "
+                        f"for {name!r}: open {tuple(opened[name].shape)},"
+                        f" requested {shape}")
+                out[name] = opened[name]
+                continue
             path = self._array_path(name)
             if os.path.exists(path):
                 mm = np.lib.format.open_memmap(path, mode="r+")
-                if tuple(mm.shape) != tuple(shape):
+                if tuple(mm.shape) != shape:
                     raise ValueError(
                         f"store layout mismatch for {name!r}: on disk "
-                        f"{tuple(mm.shape)}, requested {tuple(shape)} "
+                        f"{tuple(mm.shape)}, requested {shape} "
                         f"(did the feature set or params change?)")
                 if mm.dtype != np.float32:
                     raise ValueError(
@@ -71,8 +91,8 @@ class FeatureStore:
                 out[name] = mm
             else:
                 out[name] = np.lib.format.open_memmap(
-                    path, mode="w+", dtype=np.float32, shape=tuple(shape))
-        self._arrays = out
+                    path, mode="w+", dtype=np.float32, shape=shape)
+        self._arrays = {**opened, **out}
         return out
 
     def arrays(self, m: DatasetManifest, p: DepamParams, with_tol: bool):
@@ -91,24 +111,49 @@ class FeatureStore:
                      agg: dict[str, np.ndarray] | None,
                      live: float) -> None:
         """Atomically commit progress through ``step`` (inclusive) plus
-        the epoch-aggregate partial sums for any registered feature."""
+        the reduction carry state (epoch aggregates AND multi-window
+        partials).
+
+        The carry can be large (a multi-window SPD histogram is
+        ``n_windows x n_bins x n_db``), so it is persisted as a binary
+        ``.npz`` sidecar, not JSON text.  The sidecar is named by the
+        cursor it belongs to and written+fsynced BEFORE the cursor
+        rename, so the atomically-committed ``cursor.json`` always
+        references a matching, fully-durable state file — a crash
+        between the two leaves an orphan sidecar (garbage-collected on
+        the next commit), never a torn pair.
+        """
         if self._arrays:
             for a in self._arrays.values():
                 a.flush()
-        state = {"cursor": plan.cursor_after(step),
+        cursor = plan.cursor_after(step)
+        state = {"cursor": cursor,
                  "plan": {"start": plan.start, "stop": plan.stop,
                           "n_shards": plan.n_shards,
                           "chunk_records": plan.chunk_records},
                  "live": live}
         if agg:
-            state["agg"] = {k: np.asarray(v).tolist()
-                            for k, v in agg.items()}
+            fname = f"agg-{cursor}.npz"
+            tmp = os.path.join(self.root, fname + ".tmp")
+            with open(tmp, "wb") as f:
+                np.savez(f, **{k: np.asarray(v) for k, v in agg.items()})
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, os.path.join(self.root, fname))
+            state["agg_file"] = fname
         tmp = self._cursor_path() + ".tmp"
         with open(tmp, "w") as f:
             json.dump(state, f)
             f.flush()
             os.fsync(f.fileno())
         os.replace(tmp, self._cursor_path())      # atomic commit
+        for name in os.listdir(self.root):        # GC stale sidecars
+            if name.startswith("agg-") and name != state.get("agg_file") \
+                    and (name.endswith(".npz") or name.endswith(".tmp")):
+                try:
+                    os.remove(os.path.join(self.root, name))
+                except OSError:
+                    pass
 
     def commit(self, plan: ShardPlan, step: int, welch_sum: np.ndarray,
                live: float) -> None:
@@ -123,19 +168,23 @@ class FeatureStore:
             return None
 
     def load_agg(self) -> tuple[dict[str, np.ndarray], float] | None:
-        """Committed aggregate state as (partials, live), or None.
+        """Committed reduction-carry state as (partials, live), or None.
 
-        Understands both the generalized ``agg`` mapping and the legacy
-        flat ``welch_sum`` key from pre-registry cursors.
+        Reads the binary ``agg_file`` sidecar the cursor references;
+        the inline JSON ``agg`` mapping of older cursors is still
+        readable (the engine refuses to RESUME pre-windowed-layout
+        state — its keys no longer match — but the data stays
+        inspectable).
         """
         st = self.load_cursor()
         if st is None:
             return None
-        if "agg" in st:
+        if "agg_file" in st:
+            with np.load(os.path.join(self.root, st["agg_file"])) as z:
+                agg = {k: np.asarray(z[k], np.float64) for k in z.files}
+        elif "agg" in st:
             agg = {k: np.asarray(v, np.float64)
                    for k, v in st["agg"].items()}
-        elif "welch_sum" in st:
-            agg = {"welch": np.asarray(st["welch_sum"], np.float64)}
         else:
             agg = {}
         return agg, float(st.get("live", 0.0))

@@ -6,9 +6,21 @@ Spark job in the paper:
 
   PYTHONPATH=src python -m repro.launch.depam_run \
       --param-set 1 --files 8 --record-sec 5 --out /tmp/depam \
-      [--features welch,spl,tol,percentiles] [--wav-dir /path/to/wavs] \
+      [--features welch,spl,tol,percentiles,ltsa,spd,minmax] \
+      [--window N | --window per-file] [--wav-dir /path/to/wavs] \
       [--data-root /path/to/real/wavs] [--prefetch-depth 2] [--sync-io] \
-      [--payload int16]
+      [--payload int16] [--list-features]
+
+``--window`` sets the time resolution for the windowed soundscape
+products (``ltsa``/``spd``/``minmax``): an integer groups that many
+consecutive records per window, ``per-file`` gives one window per
+manifest file, and the default is the whole epoch as one window.
+Windowed outputs land as ``(n_windows, ...)`` arrays next to the
+per-record memmaps in ``--out``.
+
+``--list-features`` (or ``--features list``) prints the feature
+registry — per-record shape, windowed/epoch outputs, and docs — for
+the chosen parameter set, then exits; the CLI is self-describing.
 
 ``--payload int16`` switches wav-fed jobs to raw-PCM transport: the
 readers ship the 2-byte samples exactly as stored (half the host→device
@@ -56,6 +68,42 @@ from repro.core.params import PARAM_SET_1, PARAM_SET_2
 from repro.core.store import FeatureStore
 
 
+def print_feature_list(m, p) -> None:
+    """The registry, self-described: one block per feature with its
+    per-record shape, reduction outputs (and their windows), and doc."""
+    print(f"registered features (param shapes for nfft={p.nfft}, "
+          f"record_sec={p.record_size_sec:g}):")
+    for name in api.feature_names():
+        spec = api.get_feature(name)
+        shape = "reduction-only (nothing stored per record)" \
+            if spec.shape is None \
+            else f"per-record {(m.n_records,) + tuple(spec.shape(m, p))}"
+        print(f"\n  {name}: {spec.doc}")
+        print(f"    {shape}")
+        for red in spec.reductions:
+            win = "the job --window resolution" \
+                if red.window.kind == "job" else f"{red.window.key} window"
+            out = (red.window.n_windows(m),) + tuple(red.out_shape(m, p)) \
+                if red.window.kind != "job" else \
+                ("n_windows",) + tuple(red.out_shape(m, p))
+            print(f"    -> {red.out_name!r} {out} over {win}"
+                  + (f": {red.doc}" if red.doc else ""))
+
+
+def parse_window(arg: str | None):
+    """``--window`` value -> builder kwargs: N records or per-file."""
+    if arg is None or arg == "epoch":
+        return {}
+    if arg in ("per-file", "per_file", "file"):
+        return {"per_file": True}
+    try:
+        return {"records": int(arg)}
+    except ValueError:
+        raise SystemExit(
+            f"--window must be an integer record count, 'per-file', or "
+            f"'epoch', got {arg!r}")
+
+
 def main() -> None:
     # app-level choice (deliberately not made by the library): the
     # engine donates payload buffers for the early free; the jax
@@ -71,8 +119,20 @@ def main() -> None:
     ap.add_argument("--chunk-records", type=int, default=4)
     ap.add_argument("--features", default="welch,spl,tol",
                     help="comma-separated registered features "
-                         f"(available: {','.join(api.feature_names())})")
-    ap.add_argument("--out", required=True)
+                         f"(available: {','.join(api.feature_names())}; "
+                         "'list' prints the registry and exits)")
+    ap.add_argument("--window", default=None,
+                    help="time resolution for windowed reductions "
+                         "(ltsa/spd/minmax): an integer groups that "
+                         "many records per window, 'per-file' windows "
+                         "on manifest file boundaries; default: the "
+                         "whole epoch as one window")
+    ap.add_argument("--list-features", action="store_true",
+                    help="print the feature registry (docs, shapes, "
+                         "windowed outputs) and exit")
+    ap.add_argument("--out", default=None,
+                    help="output/store directory (required unless "
+                         "--list-features)")
     ap.add_argument("--wav-dir", default=None,
                     help="read records from manifest-layout wav files "
                          "(written by repro.data.wavio.write_dataset)")
@@ -100,6 +160,15 @@ def main() -> None:
     base = PARAM_SET_1 if a.param_set == 1 else PARAM_SET_2
     p = base if a.record_sec is None else dataclasses.replace(
         base, record_size_sec=a.record_sec)
+    win_kwargs = parse_window(a.window)
+    if a.list_features or a.features.strip() == "list":
+        m = DatasetManifest(n_files=a.files,
+                            records_per_file=a.records_per_file,
+                            record_size=p.record_size, fs=p.fs, seed=42)
+        print_feature_list(m, p)
+        return
+    if a.out is None:
+        ap.error("--out is required (unless --list-features)")
     if a.data_root:
         m = api.scan_dataset(a.data_root, p.record_size, seed=42)
         if m.fs != p.fs:
@@ -120,7 +189,7 @@ def main() -> None:
 
     store = FeatureStore(a.out)
     j = (api.job(m, p).features(*feats).chunk(a.chunk_records)
-         .kernels(not a.no_kernels).to(store))
+         .kernels(not a.no_kernels).to(store).window(**win_kwargs))
     wav_dir = a.data_root or a.wav_dir
     if wav_dir:
         j = j.source(api.WavSource(wav_dir))
@@ -156,9 +225,11 @@ def main() -> None:
     summary = (f"[depam] {out.n_records} records in {dt:.1f}s "
                f"({gb_min:.3f} GB/min)")
     if "welch" in out.features:
-        summary += f"; LTSA {out['welch'].shape}"
+        summary += f"; welch {out['welch'].shape}"
     if "spl" in out.features:
         summary += f", mean SPL {np.mean(out['spl']):.2f} dB"
+    for name, arr in sorted(out.windows.items()):
+        summary += f"; {name} {arr.shape}"
     print(summary)
     if done == 0:
         # already complete before this run: keep the recorded numbers
@@ -171,7 +242,10 @@ def main() -> None:
                    "gb": m.total_gb, "gb_per_min": gb_min,
                    "records_per_sec": rec_s, "x_realtime": x_rt,
                    "executor": mode, "payload": a.payload,
-                   "features": feats}, f, indent=1)
+                   "features": feats, "window": a.window or "epoch",
+                   "windows": {k: list(v.shape)
+                               for k, v in sorted(out.windows.items())}},
+                  f, indent=1)
 
 
 if __name__ == "__main__":

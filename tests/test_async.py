@@ -167,7 +167,14 @@ class TestAsyncSink:
         rows = {s: (pl_.step_indices(s).reshape(-1),
                     oneshot["welch"][pl_.step_indices(s).reshape(-1)])
                 for s in range(3)}
-        agg = {"welch": np.zeros(P.n_bins, np.float64)}
+        # a commit payload in the engine's own layout (zero state is
+        # fine: only the per-record arrays are checked after resume)
+        from repro.api import engine
+        bindings, _ = engine.resolve_bindings(
+            api.resolve_features(["welch"]), M, P, None)
+        agg = {k: np.asarray(v, np.float64) for k, v in
+               engine._init_reduce_state(bindings, None).items()
+               if k != "__live__"}
 
         asink = api.AsyncSink(BlockingStoreSink(d), queue_size=8)
         asink.open(M, P, {"welch": (P.n_bins,)}, pl_)
