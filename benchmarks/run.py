@@ -1,11 +1,12 @@
 """Benchmark aggregator — one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV and writes the consolidated
-perf-trajectory snapshot ``BENCH_PR5.json`` at the repo root: one entry
+perf-trajectory snapshot ``BENCH_PR6.json`` at the repo root: one entry
 per benchmark with µs/call plus every derived metric (records/s,
-host→device bytes/record, file opens/step, speedups...), so future PRs
-can diff against a recorded baseline instead of re-deriving one
-(``BENCH_PR4.json`` remains as the previous PR's recorded numbers).
+host→device bytes/record, file opens/step, step-latency percentiles,
+compile-cache hits, speedups...), so future PRs can diff against a
+recorded baseline instead of re-deriving one (``BENCH_PR5.json``
+remains as the previous PR's recorded numbers).
 Snapshots are keyed by config (``fast`` vs ``full``) and merged into
 the existing file, so a ``--fast`` dev run never clobbers full-config
 baseline numbers with non-comparable ones.
@@ -47,8 +48,9 @@ def main() -> None:
     rows = ["name,us_per_call,derived"]
 
     from benchmarks import async_pipeline, fig3_1_single_node, \
-        fig3_2_speedup, job_pipeline, table2_1_param_sets, \
-        roofline_report, transfer, wav_io, windowed_agg
+        fig3_2_speedup, job_pipeline, serve_multitenant, \
+        table2_1_param_sets, roofline_report, transfer, wav_io, \
+        windowed_agg
 
     rows += fig3_1_single_node.run(
         workload_records=(4, 8) if fast else (4, 8, 16))
@@ -70,12 +72,17 @@ def main() -> None:
                              record_sec=0.25 if fast else 0.5,
                              window=5 if fast else 10,
                              iters=1 if fast else 2)
+    rows += serve_multitenant.run(
+        n_tenants=3 if fast else 4,
+        file_records=(4, 4) if fast else (8, 8, 8),
+        record_sec=0.25 if fast else 0.5,
+        iters=1 if fast else 2)
     rows += roofline_report.run()
 
     print("\n".join(rows))
 
     out_path = os.path.abspath(os.path.join(
-        os.path.dirname(__file__), os.pardir, "BENCH_PR5.json"))
+        os.path.dirname(__file__), os.pardir, "BENCH_PR6.json"))
     snapshot: dict = {}
     if os.path.exists(out_path):
         try:

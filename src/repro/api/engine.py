@@ -371,81 +371,261 @@ def _closed_windows(edges: np.ndarray, cursor: int) -> int:
     return int(np.searchsorted(edges[1:], cursor, side="right"))
 
 
-def run_job(m: DatasetManifest, p: DepamParams, specs: list[FeatureSpec],
-            source: Source, sink: Sink, mesh: Mesh | None,
-            data_axes: tuple[str, ...], pl_: ShardPlan,
-            use_kernels: bool, max_steps: int | None,
-            options: ExecOptions | None = None,
-            window: Window | None = None):
-    """Drive the job over plan ``pl_``; resumable when the sink is.
+class Compiler:
+    """Where a stepper gets its jitted artifacts from.
 
-    ``window`` is the job's time resolution: every ``job``-window
-    reduction accumulates at it (epoch — one window — when None).
-    Returns (features, epoch, windows, window_edges, n_records, plan) —
-    see job.JobResult.
+    The default instance simply calls the module-level (lru-cached)
+    builders; :class:`repro.serve.CompileCache` implements the same two
+    methods with service-level sharing and hit/miss accounting, so
+    tenants of a :class:`~repro.serve.SoundscapeService` with matching
+    configurations reuse one compiled program.
     """
-    options = options or ExecOptions()
-    source = source.bind(m, p)
-    shapes = {s.name: tuple(s.shape(m, p)) for s in specs
-              if s.shape is not None}
 
-    bindings, wins = resolve_bindings(specs, m, p, window)
-    windowed = tuple(b for b in bindings if not b.to_epoch)
-    edges = {b.out_name: wins[b.wkey].edges(m) for b in windowed}
+    def step(self, specs, m, p, mesh, data_axes, use_kernels,
+             device_synth, donate, payload_dtype) -> Callable:
+        return compile_step(specs, m, p, mesh, data_axes, use_kernels,
+                            device_synth, donate, payload_dtype)
 
-    raw = not source.device_synth and source.payload_dtype == "int16"
-    donate_payload = options.donate and not source.device_synth
-    donate_carry = options.donate and not sink.wants_commit
-    step_fn = compile_step(tuple(specs), m, p, mesh, data_axes,
-                           use_kernels, source.device_synth,
-                           donate_payload, source.payload_dtype)
-    agg_fn = compile_reduce_update(bindings, mesh, data_axes,
-                                   donate_carry)
+    def reduce(self, bindings, mesh, data_axes, donate) -> Callable:
+        return compile_reduce_update(bindings, mesh, data_axes, donate)
 
-    sink.open(m, p, shapes, pl_)
-    if windowed:
-        sink.open_windows({
-            b.out_name: (b.n_windows,) + tuple(b.red.out_shape(m, p))
-            for b in windowed})
-    start_step, resumed = sink.resume_state()
-    agg_state = _init_reduce_state(bindings, resumed)
 
-    n_steps = pl_.n_steps if max_steps is None \
-        else min(pl_.n_steps, max_steps)
+DEFAULT_COMPILER = Compiler()
 
-    # Windows already flushed durably: everything closed below the
-    # committed cursor (their rows landed before that commit).
-    start_cursor = pl_.cursor_after(start_step - 1) if start_step > 0 \
-        else pl_.start
-    flushed = {b.out_name: _closed_windows(edges[b.out_name], start_cursor)
-               if start_step > 0 else 0
-               for b in windowed}
 
-    inflight: collections.deque = collections.deque()
+class JobStepper:
+    """One job as a resumable sequence of bounded step quanta.
 
-    def flush_closed(commit_state, cursor):
+    This is the schedulable unit the serving layer drives: ``run_job``
+    (and ``SoundscapeJob.run``) execute ``start -> step_once* ->
+    finish -> close`` back to back, while a
+    :class:`~repro.serve.SoundscapeService` interleaves ``step_once``
+    calls from many steppers over one device.  All per-job state — the
+    on-device reduction carry, the in-flight dispatch queue, the source
+    stream cursor and the window-flush watermarks — lives on the
+    instance, so pausing a stepper between steps and resuming it later
+    (or after a crash, through a resumable sink) is bitwise-identical
+    to an uninterrupted run: the jitted programs and their invocation
+    order per job never change, only the wall-clock interleaving does.
+
+    Lifecycle: ``start()`` binds the source, compiles (through the
+    pluggable ``compiler``), opens the sink and restores committed
+    state; ``step_once()`` dispatches one plan step (returning False
+    when none remain); ``finish()`` drains the pipeline and finalizes
+    windows/epoch aggregates, returning the result tuple; ``close()``
+    releases source/sink/stream unconditionally and must be called even
+    when any other method raised.  ``poll()`` is the non-blocking
+    readiness probe the scheduler uses to skip tenants whose live
+    source has no data yet.
+    """
+
+    def __init__(self, m: DatasetManifest, p: DepamParams,
+                 specs: list[FeatureSpec], source: Source, sink: Sink,
+                 mesh: Mesh | None, data_axes: tuple[str, ...],
+                 pl_: ShardPlan, use_kernels: bool,
+                 max_steps: int | None = None,
+                 options: ExecOptions | None = None,
+                 window: Window | None = None,
+                 compiler: Compiler | None = None):
+        self.m = m
+        self.p = p
+        self.specs = tuple(specs)
+        self.source = source
+        self.sink = sink
+        self.mesh = mesh
+        self.data_axes = tuple(data_axes)
+        self.pl = pl_
+        self.use_kernels = use_kernels
+        self.max_steps = max_steps
+        self.options = options or ExecOptions()
+        self.window = window
+        self.compiler = compiler or DEFAULT_COMPILER
+        self._started = False
+        self._closed = False
+        self._result = None
+        self._exhausted = False      # live stream ended before the plan
+        self._stream = None
+        self._inflight: collections.deque = collections.deque()
+        self._windows_out: dict[str, np.ndarray] = {}
+
+    # -- lifecycle ------------------------------------------------------
+    def start(self) -> "JobStepper":
+        """Bind, compile, open the sink, restore committed state."""
+        m, p, pl_ = self.m, self.p, self.pl
+        self.source = source = self.source.bind(m, p)
+        self._shapes = {s.name: tuple(s.shape(m, p)) for s in self.specs
+                        if s.shape is not None}
+
+        bindings, wins = resolve_bindings(self.specs, m, p, self.window)
+        self._bindings = bindings
+        self._wins = wins
+        self._windowed = tuple(b for b in bindings if not b.to_epoch)
+        self._edges = {b.out_name: wins[b.wkey].edges(m)
+                       for b in self._windowed}
+
+        self._raw = not source.device_synth \
+            and source.payload_dtype == "int16"
+        donate_payload = self.options.donate and not source.device_synth
+        donate_carry = self.options.donate and not self.sink.wants_commit
+        self._step_fn = self.compiler.step(
+            self.specs, m, p, self.mesh, self.data_axes, self.use_kernels,
+            source.device_synth, donate_payload, source.payload_dtype)
+        self._agg_fn = self.compiler.reduce(
+            bindings, self.mesh, self.data_axes, donate_carry)
+
+        self.sink.open(m, p, self._shapes, pl_)
+        if self._windowed:
+            self.sink.open_windows({
+                b.out_name: (b.n_windows,) + tuple(b.red.out_shape(m, p))
+                for b in self._windowed})
+        start_step, resumed = self.sink.resume_state()
+        self._agg_state = _init_reduce_state(bindings, resumed)
+
+        self._n_steps = pl_.n_steps if self.max_steps is None \
+            else min(pl_.n_steps, self.max_steps)
+        self._step = start_step
+
+        # Windows already flushed durably: everything closed below the
+        # committed cursor (their rows landed before that commit).
+        start_cursor = pl_.cursor_after(start_step - 1) if start_step > 0 \
+            else pl_.start
+        self._flushed = {
+            b.out_name: _closed_windows(self._edges[b.out_name],
+                                        start_cursor)
+            if start_step > 0 else 0
+            for b in self._windowed}
+
+        self._stream = None if source.device_synth \
+            else source.stream(pl_, start_step, self._n_steps)
+        self._started = True
+        return self
+
+    # -- progress -------------------------------------------------------
+    @property
+    def step(self) -> int:
+        """The next plan step to dispatch."""
+        return self._step if self._started else 0
+
+    @property
+    def n_steps(self) -> int:
+        return self._n_steps if self._started else self.pl.n_steps
+
+    @property
+    def records_done(self) -> int:
+        """Records covered by already-dispatched steps."""
+        if not self._started or self._step == 0:
+            return 0
+        return self.pl.cursor_after(self._step - 1) - self.pl.start
+
+    @property
+    def done(self) -> bool:
+        return self._started and (self._result is not None
+                                  or self._exhausted
+                                  or self._step >= self._n_steps)
+
+    def _live_mask(self, idx: np.ndarray) -> np.ndarray | None:
+        """The step's live mask, additionally excluding records a
+        finite (ended) live stream will never deliver.  For every
+        non-live source ``stream_end()`` is None and the plan mask
+        passes through untouched — the bitwise anchor."""
+        mask = self.pl.step_mask(self._step)
+        end = self.source.stream_end()
+        if end is not None:
+            mask = mask & (idx < end)
+        return mask
+
+    def poll(self) -> str:
+        """Non-blocking readiness: ``"ready"`` (step_once will not
+        block on the source), ``"pending"`` (live source still waiting
+        for data), or ``"done"`` (no steps left — the plan is finished
+        or the live stream ended)."""
+        if not self._started:
+            return "ready"          # start() is the next unit of work
+        if self.done:
+            return "done"
+        idx = self.pl.step_indices(self._step)
+        mask = self._live_mask(idx)
+        if not mask.any() and self.source.stream_end() is not None:
+            return "done"
+        return self.source.poll(idx[mask])
+
+    def step_once(self) -> bool:
+        """Dispatch one plan step (and drain past ``inflight``);
+        returns False when no step remains."""
+        assert self._started, "JobStepper.step_once before start()"
+        if self.done:
+            return False
+        step = self._step
+        pl_, source = self.pl, self.source
+        idx = pl_.step_indices(step)
+        mask = self._live_mask(idx)
+        if not mask.any() and source.stream_end() is not None:
+            # graceful end-of-stream: every remaining plan record lies
+            # beyond what the live source will ever deliver
+            self._exhausted = True
+            return False
+        dmask = jnp.asarray(mask)
+        wids = {k: jnp.asarray(w.ids(idx, self.m))
+                for k, w in self._wins.items()}
+        if source.device_synth:
+            out = self._step_fn(jnp.asarray(idx, jnp.int32), dmask)
+        elif self._raw:
+            # raw-PCM transport: ship the int16 bytes as-is (half the
+            # bus traffic, still donated) + the tiny per-record
+            # decode-scale sidecar; kernels dequantize in VMEM
+            payload = jnp.asarray(next(self._stream))
+            if payload.dtype != jnp.int16:
+                raise TypeError(
+                    f"int16 payload path got {payload.dtype} from "
+                    f"{type(source).__name__}.stream — the source's "
+                    f"payload_dtype promises raw '<i2' PCM")
+            out = self._step_fn(payload,
+                                jnp.asarray(source.scales(idx),
+                                            jnp.float32),
+                                dmask)
+        else:
+            payload = jnp.asarray(next(self._stream), jnp.float32)
+            out = self._step_fn(payload, dmask)
+        self._agg_state = self._agg_fn(self._agg_state, out, dmask, wids)
+        # start the device→host transfers now; block in _drain_one —
+        # reduction-only values never cross back to the host
+        for name in self._shapes:
+            out[name].copy_to_host_async()
+        commit_state = self._agg_state if self.sink.wants_commit else None
+        if commit_state is not None:
+            for v in commit_state.values():
+                v.copy_to_host_async()
+        self._inflight.append((step, idx, mask, out, commit_state))
+        self._step += 1
+        while len(self._inflight) > self.options.inflight:
+            self._drain_one()
+        return True
+
+    # -- sink side ------------------------------------------------------
+    def _flush_closed(self, commit_state, cursor):
         """Finalize + write every window the cursor just closed, BEFORE
         the commit that makes the cursor durable covers them."""
-        for b in windowed:
-            closed = _closed_windows(edges[b.out_name], cursor)
-            if closed > flushed[b.out_name]:
+        for b in self._windowed:
+            closed = _closed_windows(self._edges[b.out_name], cursor)
+            if closed > self._flushed[b.out_name]:
                 rows = _finalize_rows(
-                    b, commit_state, flushed[b.out_name], closed)
-                sink.write_windows(b.out_name, flushed[b.out_name],
-                                   rows.astype(np.float32))
-                flushed[b.out_name] = closed
+                    b, commit_state, self._flushed[b.out_name], closed)
+                self.sink.write_windows(b.out_name,
+                                        self._flushed[b.out_name],
+                                        rows.astype(np.float32))
+                self._flushed[b.out_name] = closed
 
-    def drain_one():
+    def _drain_one(self):
         """Materialize the oldest in-flight step into the sink."""
-        step, idx, mask, out, commit_state = inflight.popleft()
+        step, idx, mask, out, commit_state = self._inflight.popleft()
         flat_idx = idx.reshape(-1)
         keep = mask.reshape(-1)
         sel = flat_idx[keep]
         values = {
             name: np.asarray(out[name]).reshape(
-                (-1,) + shapes[name])[keep]
-            for name in shapes}
-        sink.write(step, sel, values)
+                (-1,) + self._shapes[name])[keep]
+            for name in self._shapes}
+        self.sink.write(step, sel, values)
         if commit_state is not None:
             # carry persisted in its NATIVE dtypes (float32 / int32):
             # resume casts losslessly, _finalize_rows widens to float64
@@ -453,78 +633,101 @@ def run_job(m: DatasetManifest, p: DepamParams, specs: list[FeatureSpec],
             agg_host = {k: np.asarray(v)
                         for k, v in commit_state.items()
                         if k != "__live__"}
-            flush_closed(agg_host, pl_.cursor_after(step))
-            sink.commit(pl_, step, agg_host,
-                        float(commit_state["__live__"]))
+            self._flush_closed(agg_host, self.pl.cursor_after(step))
+            self.sink.commit(self.pl, step, agg_host,
+                             float(commit_state["__live__"]))
 
-    stream = None if source.device_synth \
-        else source.stream(pl_, start_step, n_steps)
-    windows_out: dict[str, np.ndarray] = {}
-    try:
-        for step in range(start_step, n_steps):
-            idx = pl_.step_indices(step)
-            mask = pl_.step_mask(step)
-            dmask = jnp.asarray(mask)
-            wids = {k: jnp.asarray(w.ids(idx, m))
-                    for k, w in wins.items()}
-            if source.device_synth:
-                out = step_fn(jnp.asarray(idx, jnp.int32), dmask)
-            elif raw:
-                # raw-PCM transport: ship the int16 bytes as-is (half
-                # the bus traffic, still donated) + the tiny per-record
-                # decode-scale sidecar; kernels dequantize in VMEM
-                payload = jnp.asarray(next(stream))
-                if payload.dtype != jnp.int16:
-                    raise TypeError(
-                        f"int16 payload path got {payload.dtype} from "
-                        f"{type(source).__name__}.stream — the source's "
-                        f"payload_dtype promises raw '<i2' PCM")
-                out = step_fn(payload,
-                              jnp.asarray(source.scales(idx), jnp.float32),
-                              dmask)
-            else:
-                payload = jnp.asarray(next(stream), jnp.float32)
-                out = step_fn(payload, dmask)
-            agg_state = agg_fn(agg_state, out, dmask, wids)
-            # start the device→host transfers now; block in drain_one —
-            # reduction-only values never cross back to the host
-            for name in shapes:
-                out[name].copy_to_host_async()
-            commit_state = agg_state if sink.wants_commit else None
-            if commit_state is not None:
-                for v in commit_state.values():
-                    v.copy_to_host_async()
-            inflight.append((step, idx, mask, out, commit_state))
-            while len(inflight) > options.inflight:
-                drain_one()
-        while inflight:
-            drain_one()
+    def finish(self):
+        """Drain the pipeline, finalize every window (trailing partial
+        ones included) and the epoch aggregates; idempotent.
 
-        # Job end: one carry transfer, then finalize every window (the
-        # trailing partial ones included) and flush whatever the commit
-        # boundaries have not already written.  Rows flushed mid-job
-        # came from the same committed float32 state, so this pass is
-        # byte-identical to them.
-        host_state = {k: np.asarray(v) for k, v in agg_state.items()}
-        for b in windowed:
+        Returns (features, epoch, windows, window_edges, n_records,
+        plan) — see job.JobResult.  Rows flushed mid-job came from the
+        same committed float32 state, so the job-end pass is
+        byte-identical to them.
+        """
+        assert self._started, "JobStepper.finish before start()"
+        if self._result is not None:
+            return self._result
+        while self._inflight:
+            self._drain_one()
+        host_state = {k: np.asarray(v) for k, v in self._agg_state.items()}
+        for b in self._windowed:
             rows = _finalize_rows(b, host_state, 0, b.n_windows)
-            windows_out[b.out_name] = rows.astype(np.float32)
-            if flushed[b.out_name] < b.n_windows:
-                sink.write_windows(
-                    b.out_name, flushed[b.out_name],
-                    windows_out[b.out_name][flushed[b.out_name]:])
-                flushed[b.out_name] = b.n_windows
-    finally:
-        if stream is not None:
-            stream.close()
-        source.close()
-        sink.close()
+            self._windows_out[b.out_name] = rows.astype(np.float32)
+            if self._flushed[b.out_name] < b.n_windows:
+                self.sink.write_windows(
+                    b.out_name, self._flushed[b.out_name],
+                    self._windows_out[b.out_name][self._flushed[b.out_name]:])
+                self._flushed[b.out_name] = b.n_windows
 
-    live = int(host_state["__live__"])
-    epoch = {}
-    for b in bindings:
-        if b.to_epoch:
-            # single-window reductions publish squeezed, in float64
-            epoch[b.out_name] = _finalize_rows(b, host_state, 0, 1)[0]
-    window_edges = {name: edges[name].copy() for name in windows_out}
-    return (sink.result(), epoch, windows_out, window_edges, live, pl_)
+        live = int(host_state["__live__"])
+        epoch = {}
+        for b in self._bindings:
+            if b.to_epoch:
+                # single-window reductions publish squeezed, in float64
+                epoch[b.out_name] = _finalize_rows(b, host_state, 0, 1)[0]
+        window_edges = {name: self._edges[name].copy()
+                        for name in self._windows_out}
+        self._result = (self.sink.result(), epoch, self._windows_out,
+                        window_edges, live, self.pl)
+        return self._result
+
+    def close(self):
+        """Release stream, source, and sink — all three, always.
+
+        Safe to call at any point of the lifecycle (including before
+        ``start()`` or after a failure inside it) and more than once;
+        a close error in one resource never prevents releasing the
+        others (the first one re-raises after all three ran, so one
+        failed tenant cannot leak wav handles or writer threads into a
+        long-lived service process).
+        """
+        if self._closed:
+            return
+        self._closed = True
+        first: BaseException | None = None
+        for release in ((self._stream.close if self._stream is not None
+                         else None),
+                        self.source.close, self.sink.close):
+            if release is None:
+                continue
+            try:
+                release()
+            except BaseException as e:   # noqa: BLE001
+                first = first or e
+        if first is not None:
+            raise first
+
+
+def run_job(m: DatasetManifest, p: DepamParams, specs: list[FeatureSpec],
+            source: Source, sink: Sink, mesh: Mesh | None,
+            data_axes: tuple[str, ...], pl_: ShardPlan,
+            use_kernels: bool, max_steps: int | None,
+            options: ExecOptions | None = None,
+            window: Window | None = None):
+    """Drive the job over plan ``pl_`` to completion; resumable when
+    the sink is.
+
+    ``window`` is the job's time resolution: every ``job``-window
+    reduction accumulates at it (epoch — one window — when None).
+    Returns (features, epoch, windows, window_edges, n_records, plan) —
+    see job.JobResult.  This is the blocking single-tenant driver: one
+    :class:`JobStepper` run start-to-finish, with source/sink released
+    in ``finally`` even when binding, sink open, resume validation, or
+    any step raises mid-stream.
+    """
+    stepper = JobStepper(m, p, specs, source, sink, mesh, data_axes, pl_,
+                         use_kernels, max_steps, options, window)
+    return drive(stepper)
+
+
+def drive(stepper: JobStepper):
+    """Run one stepper start-to-finish with guaranteed cleanup."""
+    try:
+        stepper.start()
+        while stepper.step_once():
+            pass
+        return stepper.finish()
+    finally:
+        stepper.close()

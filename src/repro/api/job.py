@@ -243,7 +243,14 @@ class SoundscapeJob:
                         f"per-record feature of the same name — rename "
                         f"the reduction output")
 
-    def run(self) -> JobResult:
+    def _stepper(self, compiler=None,
+                 name: str | None = None) -> engine.JobStepper:
+        """Build the resumable stepper this configuration describes:
+        validate, wrap source/sink per the executor options, and hand
+        everything to the engine.  ``run()`` drives it to completion
+        inline; a :class:`~repro.serve.service.SoundscapeService` drives
+        it in bounded quanta interleaved with other tenants (passing its
+        shared compile cache as ``compiler``)."""
         specs = resolve_features(self._features)
         source: Source = as_source(self._source)
         self._validate(specs, source)
@@ -254,14 +261,31 @@ class SoundscapeJob:
             source = PrefetchSource(source, depth=self._exec.prefetch_depth)
         sink: Sink = as_sink(self._sink)
         if self._exec.inflight > 0 and not isinstance(sink, AsyncSink):
-            sink = AsyncSink(sink, queue_size=self._exec.queue_size)
-        features, epoch, windows, edges, n_records, pl_ = engine.run_job(
+            sink = AsyncSink(sink, queue_size=self._exec.queue_size,
+                             name=name)
+        return engine.JobStepper(
             self._m, self._p, specs, source, sink, self._mesh,
             self._data_axes, self._plan(), self._use_kernels,
-            self._max_steps, self._exec, self._window)
+            self._max_steps, self._exec, self._window, compiler=compiler)
+
+    def run(self) -> JobResult:
+        features, epoch, windows, edges, n_records, pl_ = engine.drive(
+            self._stepper())
         return JobResult(features=features, epoch=epoch, windows=windows,
                          window_edges=edges, n_records=n_records,
                          plan=pl_)
+
+    def submit(self, service, *, name: str | None = None,
+               weight: float = 1.0, quantum: int | None = None):
+        """Submit this job to a running
+        :class:`~repro.serve.service.SoundscapeService` instead of
+        driving it inline: the service schedules it in bounded
+        step-quanta beside other tenants over one device, sharing
+        compiled programs with same-config tenants.  Returns the
+        service's :class:`~repro.serve.service.TenantHandle`; call
+        ``handle.result()`` for this job's :class:`JobResult`."""
+        return service.submit(self, name=name, weight=weight,
+                              quantum=quantum)
 
 
 def job(manifest: DatasetManifest, params: DepamParams) -> SoundscapeJob:

@@ -243,10 +243,15 @@ class AsyncSink(Sink):
     queue's view of it.
     """
 
-    def __init__(self, inner: Sink, queue_size: int = 8):
+    def __init__(self, inner: Sink, queue_size: int = 8,
+                 name: str | None = None):
         self.inner = inner
         self.resumable = inner.resumable
         self.wants_commit = inner.wants_commit
+        # worker threads carry the owning job/tenant's name, so a thread
+        # dump of a long-lived multi-tenant service attributes every
+        # writer to its sink
+        self._name = name or "AsyncSink"
         # bound by STEPS as documented: a step enqueues a write plus,
         # for commit-consuming sinks, a commit
         items_per_step = 2 if self.wants_commit else 1
@@ -281,7 +286,7 @@ class AsyncSink(Sink):
     def _ensure_worker(self):
         if self._worker is None or not self._worker.is_alive():
             self._worker = threading.Thread(
-                target=self._run, name="AsyncSink-writer", daemon=True)
+                target=self._run, name=f"{self._name}-writer", daemon=True)
             self._worker.start()
 
     def _raise_pending(self):
@@ -338,15 +343,22 @@ class AsyncSink(Sink):
         return self.inner.result()
 
     def close(self):
-        """Drain the queue, stop the worker, close the inner sink."""
+        """Drain the queue, stop the worker, close the inner sink —
+        then (and only then) re-raise the sticky worker error.  Cleanup
+        runs to completion even for a failed sink: the writer thread
+        and the inner sink's handles are released before close()
+        reports the failure, so a failed tenant inside a service leaks
+        nothing.  The sticky error takes precedence over any secondary
+        error ``inner.close()`` raises during teardown."""
+        if self._worker is not None and self._worker.is_alive():
+            self._q.join()
+            self._q.put(None)
+            self._worker.join()
+        self._worker = None
         try:
-            self.flush()
-        finally:
-            if self._worker is not None and self._worker.is_alive():
-                self._q.put(None)
-                self._worker.join()
-            self._worker = None
             self.inner.close()
+        finally:
+            self._raise_pending()
 
     def _abort(self):
         """Crash simulation (tests): stop the worker WITHOUT draining.

@@ -59,8 +59,12 @@ class SpeculativeLoader:
         self.min_speculate_sec = min_speculate_sec
         # reads never block on other tasks -> safe in one pool;
         # step assembly blocks on reads -> must live in its own pool.
-        self.read_pool = cf.ThreadPoolExecutor(max_workers=workers)
-        self.step_pool = cf.ThreadPoolExecutor(max_workers=self.depth)
+        # Named prefixes let close() verification (and thread dumps of a
+        # long-lived service) attribute every worker to its loader.
+        self.read_pool = cf.ThreadPoolExecutor(
+            max_workers=workers, thread_name_prefix="SpecLoader-read")
+        self.step_pool = cf.ThreadPoolExecutor(
+            max_workers=self.depth, thread_name_prefix="SpecLoader-step")
         self.durations: list[float] = []
         self.speculated = 0
         self._lock = threading.Lock()
@@ -152,20 +156,27 @@ class SpeculativeLoader:
         order, keeping ``depth`` steps in flight.
 
         The window form is what lets a resumed job prefetch from its
-        committed cursor instead of step 0.  Closing the generator early
-        leaves submitted futures behind; ``close()`` cancels them.
+        committed cursor instead of step 0.  Abandoning the generator
+        early (a preempted or failed consumer) cancels the still-queued
+        step futures on the way out; ``close()`` then joins the pools so
+        nothing keeps running behind the caller's back.
         """
         n = self.plan.n_steps if stop is None else min(stop,
                                                        self.plan.n_steps)
         pending: dict[int, cf.Future] = {}
-        for step in range(start, min(start + self.depth, n)):
-            pending[step] = self.step_pool.submit(self._load_step, step)
-        for step in range(start, n):
-            payload, mask = pending.pop(step).result()
-            nxt = step + self.depth
-            if nxt < n:
-                pending[nxt] = self.step_pool.submit(self._load_step, nxt)
-            yield step, payload, mask
+        try:
+            for step in range(start, min(start + self.depth, n)):
+                pending[step] = self.step_pool.submit(self._load_step, step)
+            for step in range(start, n):
+                payload, mask = pending.pop(step).result()
+                nxt = step + self.depth
+                if nxt < n:
+                    pending[nxt] = self.step_pool.submit(self._load_step,
+                                                         nxt)
+                yield step, payload, mask
+        finally:
+            for fut in pending.values():
+                fut.cancel()
 
     def __iter__(self):
         """Yield (step, payload, mask) with ``depth`` steps of prefetch."""
@@ -180,6 +191,22 @@ class SpeculativeLoader:
                 "median_s": float(np.median(d)),
                 "p99_s": float(np.quantile(d, 0.99))}
 
-    def close(self):
-        self.read_pool.shutdown(wait=False, cancel_futures=True)
-        self.step_pool.shutdown(wait=False, cancel_futures=True)
+    def close(self, wait: bool = True):
+        """Shut both pools down; with ``wait`` (the default) block until
+        every worker thread has exited.
+
+        Queued tasks are cancelled; already-running reads finish their
+        current call and the step-assembly wrappers waiting on them
+        unwind via ``CancelledError``/pool-shutdown errors.  A consumer
+        that abandons ``iter_steps`` mid-job (scheduler preemption, a
+        failed tenant) therefore leaves NO orphaned executor threads or
+        in-flight futures behind — the contract the serving layer's
+        per-tenant isolation depends on.  ``wait=False`` keeps the old
+        fire-and-forget behavior for interactive teardown.
+
+        Read pool first: cancelling its queue makes the step-assembly
+        wrappers blocked on those futures unwind via ``CancelledError``
+        immediately, instead of waiting for every queued read to run.
+        """
+        self.read_pool.shutdown(wait=wait, cancel_futures=True)
+        self.step_pool.shutdown(wait=wait, cancel_futures=True)

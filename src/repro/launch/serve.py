@@ -1,75 +1,193 @@
-"""Serving driver: batched prefill + decode loop at smoke scale.
+"""Multi-tenant soundscape service driver — many jobs, one device.
 
-Demonstrates the full serving path (prompt batch -> prefill -> N decode
-steps with the flash-decode cache) on CPU; the same step functions lower
-on the production mesh in dryrun.py.
+Launches a :class:`~repro.serve.SoundscapeService` with a fleet of
+batch tenants (device-synthesized corpora standing in for wav archives)
+and optionally live tenants (ring-buffer streams fed by producer
+threads), drives them all concurrently over one device, and reports
+per-tenant progress, step latency, and compile-cache reuse:
 
-  PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
-      --reduced --batch 4 --prompt-len 32 --gen 16
+  PYTHONPATH=src python -m repro.launch.serve \
+      --tenants 3 --live 1 --files 2 --records-per-file 8 \
+      --record-sec 0.25 --features welch,spl --chunk 4 \
+      [--scheduler drr --weights 1,2,1] [--quantum 2] \
+      [--out-root /tmp/svc] [--verify]
+
+``--scheduler rr`` (default) is strict round-robin; ``drr`` is
+deficit-weighted round-robin with per-tenant ``--weights``.
+``--out-root`` gives every tenant its own resumable FeatureStore
+directory instead of in-memory arrays.  ``--verify`` re-runs each
+tenant's job solo after the service drains and asserts the concurrent
+results are bitwise-identical — the service's core invariant,
+demonstrated from the CLI.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import pathlib
+import threading
 import time
+import warnings
 
-import jax
-import jax.numpy as jnp
+import numpy as np
 
-import repro.configs as configs
-from repro.configs.base import RunSpec
-from repro.models import lm, module
+from repro import api
+from repro.core.manifest import DatasetManifest
+from repro.core.params import PARAM_SET_1, PARAM_SET_2
+from repro.serve import (DeficitRoundRobin, LiveSource, RoundRobin,
+                         SoundscapeService)
 
 
-def run(arch: str, reduced: bool, batch: int, prompt_len: int, gen: int,
-        seed: int = 0, greedy: bool = True):
-    cfg = configs.get(arch, reduced=reduced)
-    rt = RunSpec(tp=1, remat="none", attn_chunk=512)
-    params = module.init(jax.random.PRNGKey(seed), lm.param_defs(cfg, rt))
-    s_max = prompt_len + gen + (cfg.n_frontend_tokens
-                                if cfg.family == "vlm" else 0)
+def _percentile_ms(seconds: list[float], q: float) -> float:
+    return float(np.percentile(np.asarray(seconds), q) * 1e3) \
+        if seconds else 0.0
 
-    key = jax.random.PRNGKey(seed + 1)
-    batch_d = {"tokens": jax.random.randint(key, (batch, prompt_len), 0,
-                                            cfg.vocab)}
-    if cfg.family == "vlm":
-        batch_d["patches"] = jax.random.normal(
-            key, (batch, cfg.n_frontend_tokens, cfg.frontend_dim))
-    if cfg.family == "audio":
-        batch_d["frames"] = jax.random.normal(
-            key, (batch, prompt_len * 4, cfg.frontend_dim))
 
-    prefill = jax.jit(lambda p, b: lm.prefill(p, b, cfg, rt, s_max))
-    decode = jax.jit(
-        lambda p, t, c, pos: lm.decode_step(p, t, c, pos, cfg, rt))
+def _bitwise(a, b) -> bool:
+    """Bitwise equality of two JobResults across all three namespaces."""
+    for da, db in ((a.features or {}, b.features or {}),
+                   (a.epoch, b.epoch), (a.windows, b.windows)):
+        if sorted(da) != sorted(db):
+            return False
+        for k in da:
+            if not (np.asarray(da[k]) == np.asarray(db[k])).all():
+                return False
+    return True
+
+
+def run(tenants: int = 2, live: int = 0, files: int = 2,
+        records_per_file: int = 8, record_sec: float = 0.25,
+        features: tuple[str, ...] = ("welch", "spl"), chunk: int = 4,
+        quantum: int = 2, scheduler: str = "rr",
+        weights: list[float] | None = None, param_set: int = 1,
+        out_root: str | None = None, verify: bool = False,
+        seed: int = 0, timeout: float = 600.0):
+    """Drive ``tenants`` batch + ``live`` streaming jobs through one
+    service; returns ``(results, service)`` with ``results`` mapping
+    tenant name -> :class:`~repro.api.job.JobResult`."""
+    base = PARAM_SET_1 if param_set == 1 else PARAM_SET_2
+    p = dataclasses.replace(base, record_size_sec=record_sec)
+    m = DatasetManifest(n_files=files, records_per_file=records_per_file,
+                        record_size=p.record_size, fs=p.fs, seed=42)
+    sched = DeficitRoundRobin() if scheduler == "drr" else RoundRobin()
+    svc = SoundscapeService(scheduler=sched, quantum=quantum)
+    print(f"[serve] {tenants} batch + {live} live tenants over one "
+          f"device; dataset {m.n_records} records x "
+          f"{p.record_size} samples; features {list(features)}; "
+          f"scheduler {scheduler}, quantum {quantum}")
+
+    def sink_for(name):
+        if out_root is None:
+            return None
+        return str(pathlib.Path(out_root) / name)
+
+    def batch_job():
+        return api.job(m, p).features(*features).chunk(chunk)
+
+    handles = {}
+    for i in range(tenants):
+        name = f"batch-{i}"
+        w = weights[i] if weights and i < len(weights) else 1.0
+        handles[name] = (batch_job().to(sink_for(name))
+                        .submit(svc, name=name, weight=w))
+
+    # live tenants: a producer thread pushes pre-generated "acquisition"
+    # records through a bounded ring while the service consumes them
+    rng = np.random.default_rng(seed)
+    live_recs: dict[str, np.ndarray] = {}
+    feeders: list[threading.Thread] = []
+    for i in range(live):
+        name = f"live-{i}"
+        recs = rng.standard_normal(
+            (m.n_records, p.record_size)).astype(np.float32)
+        src = LiveSource(record_size=p.record_size,
+                         capacity=max(4 * chunk, 8))
+        handles[name] = (batch_job().source(src).to(sink_for(name))
+                        .submit(svc, name=name))
+        th = threading.Thread(target=src.feed, args=(recs,),
+                              name=f"{name}-producer", daemon=True)
+        th.start()
+        feeders.append(th)
+        live_recs[name] = recs
 
     t0 = time.time()
-    logits, caches = prefill(params, batch_d)
-    toks = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-    out = [toks]
-    base = prompt_len + (cfg.n_frontend_tokens if cfg.family == "vlm" else 0)
-    for i in range(gen - 1):
-        logits, caches = decode(params, toks, caches,
-                                jnp.int32(base + i), )
-        toks = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-        out.append(toks)
-    gen_toks = jnp.concatenate(out, axis=1)
+    svc.run(timeout=timeout)
     dt = time.time() - t0
-    print(f"[serve] {cfg.name}: batch={batch} prompt={prompt_len} "
-          f"gen={gen} in {dt:.2f}s "
-          f"({batch * gen / dt:.1f} tok/s incl. compile)")
-    return gen_toks
+    for th in feeders:
+        th.join()
+
+    results = {name: h.result() for name, h in handles.items()}
+    total_records = sum(r.n_records for r in results.values())
+    print(f"[serve] drained {len(handles)} tenants "
+          f"({total_records} records) in {dt:.2f}s "
+          f"({total_records / dt:.1f} records/s aggregate)")
+    for name, h in sorted(handles.items()):
+        print(f"  {name}: {h.steps_run} steps, "
+              f"p50 {_percentile_ms(h.step_seconds, 50):.2f} ms / "
+              f"p95 {_percentile_ms(h.step_seconds, 95):.2f} ms per step")
+    cs = svc.stats()["compile"]
+    print(f"[serve] compile cache: step {cs['step']['hits']} hits / "
+          f"{cs['step']['misses']} misses, reduce "
+          f"{cs['reduce']['hits']} hits / {cs['reduce']['misses']} "
+          f"misses ({cs['step']['entries']} step programs for "
+          f"{len(handles)} tenants)")
+
+    if verify:
+        for name in sorted(handles):
+            j = batch_job()     # fresh in-memory solo run of each job
+            if name in live_recs:
+                recs = live_recs[name]
+
+                def reader(idx, recs=recs):
+                    flat = idx.reshape(-1) % len(recs)
+                    return recs[flat].reshape(*idx.shape, -1)
+                j = j.source(reader)
+            solo = j.run()
+            ok = _bitwise(results[name], solo)
+            print(f"[serve] verify {name}: "
+                  f"{'bitwise-identical' if ok else 'MISMATCH'}")
+            if not ok:
+                raise SystemExit(
+                    f"tenant {name} diverged from its solo run")
+    return results, svc
 
 
 def main() -> None:
+    warnings.filterwarnings(
+        "ignore", message="Some donated buffers were not usable")
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--tenants", type=int, default=2,
+                    help="batch tenants (device-synthesized corpora)")
+    ap.add_argument("--live", type=int, default=0,
+                    help="live tenants (ring-buffer streams fed by "
+                         "producer threads)")
+    ap.add_argument("--files", type=int, default=2)
+    ap.add_argument("--records-per-file", type=int, default=8)
+    ap.add_argument("--record-sec", type=float, default=0.25)
+    ap.add_argument("--features", default="welch,spl")
+    ap.add_argument("--chunk", type=int, default=4)
+    ap.add_argument("--quantum", type=int, default=2,
+                    help="plan steps per scheduling turn")
+    ap.add_argument("--scheduler", choices=("rr", "drr"), default="rr")
+    ap.add_argument("--weights", default=None,
+                    help="comma-separated per-tenant weights (drr)")
+    ap.add_argument("--param-set", type=int, default=1, choices=(1, 2))
+    ap.add_argument("--out-root", default=None,
+                    help="per-tenant FeatureStore directories under "
+                         "this root (default: in-memory)")
+    ap.add_argument("--verify", action="store_true",
+                    help="re-run each tenant solo and assert the "
+                         "concurrent results are bitwise-identical")
     a = ap.parse_args()
-    toks = run(a.arch, a.reduced, a.batch, a.prompt_len, a.gen)
-    print("[serve] sample token ids:", toks[0, :10].tolist())
+    weights = [float(w) for w in a.weights.split(",")] \
+        if a.weights else None
+    run(tenants=a.tenants, live=a.live, files=a.files,
+        records_per_file=a.records_per_file, record_sec=a.record_sec,
+        features=tuple(f.strip() for f in a.features.split(",")
+                       if f.strip()),
+        chunk=a.chunk, quantum=a.quantum, scheduler=a.scheduler,
+        weights=weights, param_set=a.param_set, out_root=a.out_root,
+        verify=a.verify)
 
 
 if __name__ == "__main__":

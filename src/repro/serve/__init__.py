@@ -1,0 +1,24 @@
+"""Serving layer: multi-tenant streaming soundscape service.
+
+One long-lived :class:`SoundscapeService` runs many concurrent
+soundscape jobs over one device — a shared :class:`CompileCache` of
+jitted step/reduce programs, a fair scheduler (:class:`RoundRobin` /
+:class:`DeficitRoundRobin`) interleaving bounded step-quanta, and
+:class:`LiveSource` ring buffers admitting real-time streams beside
+batch wav corpora.
+"""
+from .compile_cache import CompileCache
+from .live import LiveSource, RingOverrun
+from .scheduler import DeficitRoundRobin, RoundRobin, Scheduler
+from .service import SoundscapeService, TenantHandle
+
+__all__ = [
+    "CompileCache",
+    "DeficitRoundRobin",
+    "LiveSource",
+    "RingOverrun",
+    "RoundRobin",
+    "Scheduler",
+    "SoundscapeService",
+    "TenantHandle",
+]

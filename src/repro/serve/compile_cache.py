@@ -1,0 +1,88 @@
+"""Compiled-step cache — tenants with matching configs share jit work.
+
+Compilation is the service's dominant cold-start cost: tracing + XLA
+lowering of the fused feature step takes orders of magnitude longer
+than executing it at miniature scale, and a service that recompiled per
+tenant would pay it once per *submission* instead of once per distinct
+configuration.  The cache keys on exactly what determines the compiled
+program:
+
+  * the **step** artifact — ``(feature specs, manifest, params, mesh,
+    data axes, kernel toggle, device-synth flag, donation, payload
+    dtype)`` (see :func:`repro.api.engine.compile_step`); specs and
+    manifests are frozen dataclasses, so the tuple is hashable as-is;
+  * the **reduce** artifact — ``(reduction bindings, mesh, data axes,
+    donation)``; the bindings embed the resolved window spec and
+    per-window state layout, so tenants at different window resolutions
+    correctly miss each other.
+
+Both maps live behind one lock (submissions may arrive from any
+thread) and count hits/misses per kind — ``stats()`` is the service's
+cold-vs-warm observability hook, and the serve tests assert a second
+same-config tenant reports >= 1 hit.
+
+The module-level builders in ``repro.api.engine`` keep their own
+``lru_cache``; this class deliberately layers *accounting and
+service-scoped sharing* on top rather than replacing them, so a
+stand-alone ``job.run()`` outside any service still reuses programs.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Callable
+
+from repro.api import engine
+
+
+class CompileCache(engine.Compiler):
+    """A :class:`repro.api.engine.Compiler` with shared artifacts and
+    hit/miss counters; one instance per :class:`SoundscapeService`,
+    handed to every tenant's :class:`~repro.api.engine.JobStepper`."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._entries: dict[str, dict] = {"step": {}, "reduce": {}}
+        self._hits = {"step": 0, "reduce": 0}
+        self._misses = {"step": 0, "reduce": 0}
+
+    def _get(self, kind: str, key, build: Callable):
+        with self._lock:
+            if key in self._entries[kind]:
+                self._hits[kind] += 1
+                return self._entries[kind][key]
+            # miss counted up front: a failed build should not be
+            # silently retried as another "first" compile
+            self._misses[kind] += 1
+        # build OUTSIDE the lock — tracing can take seconds and must not
+        # serialize against other tenants' lookups.  Two concurrent
+        # first-misses of one key both build (the underlying lru_cache
+        # dedupes the actual XLA work); last write wins, harmlessly.
+        fn = build()
+        with self._lock:
+            self._entries[kind].setdefault(key, fn)
+            return self._entries[kind][key]
+
+    def step(self, specs, m, p, mesh, data_axes, use_kernels,
+             device_synth, donate, payload_dtype) -> Callable:
+        key = (specs, m, p, mesh, data_axes, use_kernels, device_synth,
+               donate, payload_dtype)
+        return self._get(
+            "step", key,
+            lambda: engine.compile_step(specs, m, p, mesh, data_axes,
+                                        use_kernels, device_synth,
+                                        donate, payload_dtype))
+
+    def reduce(self, bindings, mesh, data_axes, donate) -> Callable:
+        key = (bindings, mesh, data_axes, donate)
+        return self._get(
+            "reduce", key,
+            lambda: engine.compile_reduce_update(bindings, mesh,
+                                                 data_axes, donate))
+
+    def stats(self) -> dict:
+        """``{"step": {"hits", "misses", "entries"}, "reduce": {...}}``."""
+        with self._lock:
+            return {kind: {"hits": self._hits[kind],
+                           "misses": self._misses[kind],
+                           "entries": len(self._entries[kind])}
+                    for kind in ("step", "reduce")}

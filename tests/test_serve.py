@@ -1,0 +1,411 @@
+"""Multi-tenant serving layer: concurrent-vs-sequential bitwise
+identity (fresh and resumed, mixed payload transports), scheduler
+fairness bounds, compile-cache accounting, LiveSource ring semantics
+(backpressure, graceful EOS, mid-stream resume), and the engine's
+resource-release guarantees (try/finally source/sink close, no
+orphaned loader threads)."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.api.sinks import AsyncSink, MemorySink, Sink
+from repro.api.sources import PrefetchSource, Source
+from repro.core.manifest import DatasetManifest, plan
+from repro.core.params import DepamParams
+from repro.data.wavio import write_dataset
+from repro.serve import (DeficitRoundRobin, LiveSource, RingOverrun,
+                         RoundRobin, SoundscapeService)
+
+P = DepamParams(nfft=256, window_size=256, window_overlap=128,
+                record_size_sec=0.25)
+M = DatasetManifest(n_files=3, records_per_file=4,
+                    record_size=P.record_size, fs=P.fs, seed=7)
+FEATS = ("welch", "spl")
+
+
+@pytest.fixture(scope="module")
+def dataset(tmp_path_factory):
+    root = str(tmp_path_factory.mktemp("wavs"))
+    write_dataset(root, M)
+    return root
+
+
+def synth_job(**kw):
+    return api.job(M, P).features(*FEATS).chunk(4)
+
+
+def wav_job(root, payload=None):
+    j = api.job(M, P).features(*FEATS).chunk(4).source(api.WavSource(root))
+    return j if payload is None else j.payload(payload)
+
+
+def assert_bitwise(a, b):
+    """Two JobResults agree bit for bit across all three namespaces."""
+    for da, db in ((a.features or {}, b.features or {}),
+                   (a.epoch, b.epoch), (a.windows, b.windows)):
+        assert sorted(da) == sorted(db)
+        for k in da:
+            assert np.array_equal(np.asarray(da[k]), np.asarray(db[k])), k
+
+
+class TestSchedulers:
+    def test_round_robin_cycles(self):
+        rr = RoundRobin()
+        for t in "abc":
+            rr.add(t)
+        picks = [rr.pick(["a", "b", "c"]) for _ in range(6)]
+        assert picks == ["a", "b", "c", "a", "b", "c"]
+
+    def test_round_robin_skips_blocked_without_losing_place(self):
+        rr = RoundRobin()
+        for t in "abc":
+            rr.add(t)
+        assert rr.pick(["a", "b", "c"]) == "a"
+        # b blocked on its live ring: turn passes to c, and when b is
+        # runnable again it is next, not pushed to the back forever
+        assert rr.pick(["a", "c"]) == "c"
+        assert rr.pick(["a", "b", "c"]) == "a"
+        assert rr.pick(["a", "b", "c"]) == "b"
+
+    def test_deficit_weights_shape_the_pick_sequence(self):
+        drr = DeficitRoundRobin()
+        drr.add("heavy", weight=2.0)
+        drr.add("light", weight=1.0)
+        picks = []
+        for _ in range(6):
+            t = drr.pick(["heavy", "light"])
+            drr.charge(t, 1)
+            picks.append(t)
+        # per replenish round: 2 heavy turns to 1 light turn
+        assert picks == ["heavy", "heavy", "light",
+                         "heavy", "heavy", "light"]
+
+    def test_blocked_tenant_keeps_its_credit(self):
+        drr = DeficitRoundRobin()
+        drr.add("a")
+        drr.add("b")
+        assert drr.pick(["a", "b"]) == "a"
+        drr.charge("a", 1)
+        # a starved for a while: b runs alone and burns credit
+        for _ in range(3):
+            drr.charge(drr.pick(["b"]), 1)
+        # back runnable, a's earned share catches it up first
+        assert drr.pick(["a", "b"]) == "a"
+
+
+class TestServiceBitwise:
+    """The acceptance contract: concurrent tenants over one device are
+    bitwise-identical to running each job sequentially alone."""
+
+    def test_mixed_tenants_match_sequential(self, dataset):
+        """synth + wav-float32 + wav-int16 tenants in one service."""
+        jobs = {"synth": synth_job(),
+                "wav32": wav_job(dataset),
+                "wav16": wav_job(dataset, payload="int16")}
+        svc = SoundscapeService(quantum=2)
+        handles = {n: j.submit(svc, name=n) for n, j in jobs.items()}
+        svc.run(timeout=600)
+        for name in jobs:
+            seq = {"synth": synth_job(),
+                   "wav32": wav_job(dataset),
+                   "wav16": wav_job(dataset, payload="int16")}[name].run()
+            assert_bitwise(handles[name].result(), seq)
+
+    def test_resumed_tenants_match_sequential(self, dataset, tmp_path):
+        """Crash two store-backed tenants mid-job, resume them
+        concurrently through a second service: stores + epoch outputs
+        bitwise-equal to uninterrupted sequential runs."""
+        da, db = str(tmp_path / "a"), str(tmp_path / "b")
+        svc = SoundscapeService()
+        synth_job().to(da).limit(1).submit(svc, name="a")
+        wav_job(dataset).to(db).limit(1).submit(svc, name="b")
+        svc.run(timeout=600)
+
+        svc2 = SoundscapeService()
+        ha = synth_job().to(da).submit(svc2, name="a")
+        hb = wav_job(dataset).to(db).submit(svc2, name="b")
+        svc2.run(timeout=600)
+        assert_bitwise(ha.result(), synth_job().run())
+        assert_bitwise(hb.result(), wav_job(dataset).run())
+
+    def test_fairness_bound(self):
+        """Equal always-runnable tenants: at every prefix of the turn
+        trace no tenant is more than one turn ahead of another."""
+        svc = SoundscapeService(quantum=1)
+        names = [f"t{i}" for i in range(3)]
+        for n in names:
+            synth_job().submit(svc, name=n)
+        svc.run(timeout=600)
+        counts = dict.fromkeys(names, 0)
+        for name, _ in svc.trace:
+            counts[name] += 1
+            assert max(counts.values()) - min(counts.values()) <= 1, \
+                svc.trace
+
+    def test_compile_cache_accounting(self, dataset):
+        """Same-config tenants share one program (>= 1 hit); a
+        different payload transport compiles its own."""
+        svc = SoundscapeService()
+        for n in ("a", "b"):
+            synth_job().submit(svc, name=n)
+        wav_job(dataset, payload="int16").submit(svc, name="c")
+        svc.run(timeout=600)
+        cs = svc.stats()["compile"]
+        assert cs["step"]["hits"] >= 1
+        assert cs["step"]["entries"] == 2      # synth vs int16 wav
+        assert cs["reduce"]["hits"] >= 1
+        assert cs["step"]["hits"] + cs["step"]["misses"] >= 3
+
+    def test_failed_tenant_is_isolated(self):
+        class Boom(Source):
+            def __init__(self):
+                self.closed = False
+
+            def fetch(self, indices):
+                raise RuntimeError("acquisition died")
+
+            def close(self):
+                self.closed = True
+
+        boom = Boom()
+        svc = SoundscapeService()
+        bad = synth_job().source(boom).submit(svc, name="bad")
+        good = synth_job().submit(svc, name="good")
+        svc.run(timeout=600)
+        assert bad.state == "failed"
+        with pytest.raises(RuntimeError, match="failed"):
+            bad.result()
+        assert boom.closed                    # failed tenant released
+        assert_bitwise(good.result(), synth_job().run())
+
+    def test_background_service_submit_and_result(self):
+        svc = SoundscapeService().start()
+        try:
+            h = synth_job().submit(svc, name="bg")
+            res = h.result(timeout=600)
+            assert res.n_records == M.n_records
+        finally:
+            svc.stop()
+
+
+class TestLiveSource:
+    def rec(self, n, seed=0):
+        rng = np.random.default_rng(seed)
+        return rng.standard_normal((n, P.record_size)).astype(np.float32)
+
+    def test_backpressure_blocks_then_raises(self):
+        src = LiveSource(record_size=4, capacity=2)
+        src.push(np.zeros(4, np.float32))
+        src.push(np.zeros(4, np.float32))
+        with pytest.raises(RingOverrun, match="ring full"):
+            src.push(np.zeros(4, np.float32), timeout=0.05)
+        src.fetch(np.array([0]))              # consumer frees a slot
+        src.push(np.zeros(4, np.float32))     # now admitted
+
+    def test_close_wakes_blocked_producer(self):
+        src = LiveSource(record_size=4, capacity=1)
+        src.push(np.zeros(4, np.float32))
+        err = []
+
+        def producer():
+            try:
+                src.push(np.ones(4, np.float32), timeout=30)
+            except RuntimeError as e:
+                err.append(e)
+
+        th = threading.Thread(target=producer)
+        th.start()
+        time.sleep(0.05)
+        src.close()
+        th.join(timeout=5)
+        assert not th.is_alive()
+        assert err and "closed" in str(err[0])
+
+    def test_poll_and_fetch_timeout(self):
+        src = LiveSource(record_size=4, capacity=4, fetch_timeout=0.05)
+        assert src.poll(np.array([0])) == "pending"
+        src.push(np.zeros(4, np.float32))
+        assert src.poll(np.array([0])) == "ready"
+        with pytest.raises(TimeoutError, match="starved"):
+            src.fetch(np.array([0, 1]))
+
+    def test_push_after_end_raises(self):
+        src = LiveSource(record_size=4, capacity=4)
+        src.end()
+        with pytest.raises(RuntimeError, match="closed"):
+            src.push(np.zeros(4, np.float32))
+
+    def test_eos_partial_stream_matches_truncated_reference(self):
+        """End the stream after 9 of 12 manifest records: the job
+        finishes gracefully over what arrived — per-record features,
+        epoch aggregates, and windowed reductions all bitwise-equal to
+        a batch job over just those records."""
+        recs = self.rec(9, seed=3)
+        src = LiveSource(record_size=P.record_size, capacity=16)
+        svc = SoundscapeService()
+        h = (api.job(M, P).features("welch", "ltsa").window(records=4)
+             .chunk(4).source(src).submit(svc, name="live"))
+        th = threading.Thread(target=src.feed, args=(recs,))
+        th.start()
+        svc.run(timeout=600)
+        th.join()
+        res = h.result()
+        assert res.n_records == 9             # delivered, not manifest
+
+        m9 = DatasetManifest.from_files(
+            (4, 4, 1), record_size=P.record_size, fs=P.fs, seed=7)
+
+        def reader(idx):
+            flat = np.clip(idx.reshape(-1), 0, 8)
+            return recs[flat].reshape(*idx.shape, -1)
+
+        ref = (api.job(m9, P).features("welch", "ltsa").window(records=4)
+               .chunk(4).source(reader).run())
+        assert np.array_equal(res["welch"][:9], ref["welch"][:9])
+        assert np.array_equal(res["mean_welch"], ref["mean_welch"])
+        assert np.array_equal(res["ltsa"], ref["ltsa"])
+
+    def test_mid_stream_resume_is_bitwise(self, tmp_path):
+        """Crash a live tenant after one committed step; reconstruct
+        the stream from the committed cursor and re-feed: the resumed
+        accumulation equals an uninterrupted run bitwise."""
+        d = str(tmp_path / "store")
+        recs = self.rec(M.n_records, seed=5)
+        src = LiveSource(record_size=P.record_size, capacity=16)
+        svc = SoundscapeService()
+        h = (api.job(M, P).features(*FEATS).chunk(4).source(src)
+             .to(d).limit(1).submit(svc, name="crash"))
+        th = threading.Thread(target=src.feed, args=(recs[:4],),
+                              kwargs={"end": False})
+        th.start()
+        svc.run(timeout=600)
+        th.join()
+        src.close()
+        assert h.records_done == 4
+
+        resumed = api.job(M, P).features(*FEATS).chunk(4).to(d)
+        step = resumed.resume_step()
+        start = step * resumed._plan().records_per_step
+        assert start == 4
+        src2 = LiveSource(record_size=P.record_size, capacity=16,
+                          start=start)
+        svc2 = SoundscapeService()
+        h2 = resumed.source(src2).submit(svc2, name="resume")
+        th2 = threading.Thread(target=src2.feed, args=(recs[start:],))
+        th2.start()
+        svc2.run(timeout=600)
+        th2.join()
+
+        def reader(idx):
+            flat = idx.reshape(-1) % M.n_records
+            return recs[flat].reshape(*idx.shape, -1)
+
+        ref = api.job(M, P).features(*FEATS).chunk(4).source(reader).run()
+        out = h2.result()
+        for name in FEATS:
+            assert np.array_equal(np.asarray(out[name]), ref[name]), name
+        assert np.array_equal(out["mean_welch"], ref["mean_welch"])
+
+    def test_fetch_before_stream_start_raises(self):
+        src = LiveSource(record_size=4, capacity=4, start=8)
+        with pytest.raises(ValueError, match="before the stream start"):
+            src.fetch(np.array([2]))
+
+
+class TestResourceRelease:
+    """The engine releases sources and sinks on ANY exit path."""
+
+    class TrackingSource(Source):
+        def __init__(self, fail_at_step=None):
+            self.closed = False
+            self.calls = 0
+            self.fail_at_step = fail_at_step
+
+        def fetch(self, indices):
+            self.calls += 1
+            if self.fail_at_step is not None \
+                    and self.calls > self.fail_at_step:
+                raise RuntimeError("mid-stream read failure")
+            flat = indices.reshape(-1)
+            out = np.zeros((flat.size, P.record_size), np.float32)
+            return out.reshape(*indices.shape, P.record_size)
+
+        def close(self):
+            self.closed = True
+
+    class TrackingSink(MemorySink):
+        def __init__(self, fail_on_open=False):
+            super().__init__()
+            self.closed = False
+            self.fail_on_open = fail_on_open
+
+        def open(self, m, p, shapes, plan):
+            if self.fail_on_open:
+                raise RuntimeError("store unavailable")
+            super().open(m, p, shapes, plan)
+
+        def close(self):
+            self.closed = True
+
+    def test_mid_stream_failure_closes_source_and_sink(self):
+        src = self.TrackingSource(fail_at_step=1)
+        sink = self.TrackingSink()
+        with pytest.raises(RuntimeError, match="mid-stream"):
+            (api.job(M, P).features(*FEATS).chunk(4)
+             .source(src).to(sink).run())
+        assert src.closed
+        assert sink.closed
+
+    def test_sink_open_failure_still_closes_source(self):
+        src = self.TrackingSource()
+        sink = self.TrackingSink(fail_on_open=True)
+        with pytest.raises(RuntimeError, match="store unavailable"):
+            (api.job(M, P).features(*FEATS).chunk(4)
+             .source(src).to(sink).run())
+        assert src.closed
+        assert sink.closed
+
+    def test_abandoned_prefetch_leaves_no_loader_threads(self):
+        def slow_reader(idx):
+            time.sleep(0.02)
+            flat = idx.reshape(-1)
+            return np.zeros((flat.size, P.record_size), np.float32) \
+                .reshape(*idx.shape, P.record_size)
+
+        src = PrefetchSource(slow_reader, depth=2).bind(M, P)
+        pl = plan(M, 1, 4)
+        gen = src.stream(pl, 0, pl.n_steps)
+        next(gen)                     # consume one step, abandon the rest
+        del gen
+        src.close()
+        orphans = [t.name for t in threading.enumerate()
+                   if t.name.startswith("SpecLoader")]
+        assert orphans == []
+
+    def test_async_sink_close_releases_after_worker_failure(self):
+        class FailingSink(Sink):
+            wants_commit = False
+
+            def __init__(self):
+                self.closed = False
+
+            def write(self, step, indices, values):
+                raise RuntimeError("disk full")
+
+            def close(self):
+                self.closed = True
+
+        a = AsyncSink(FailingSink(), queue_size=2)
+        a.open(M, P, {"welch": (P.n_bins,)}, plan(M, 1, 4))
+        a.write(0, np.array([0]), {"welch": np.zeros((1, P.n_bins),
+                                                     np.float32)})
+        with pytest.raises(RuntimeError, match="AsyncSink worker"):
+            a.close()
+        # the sticky error did NOT leak the worker or the inner sink
+        assert a.inner.closed
+        assert a._worker is None
+        assert [t for t in threading.enumerate()
+                if t.name.startswith("AsyncSink")] == []
