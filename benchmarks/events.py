@@ -1,0 +1,111 @@
+"""Event-detection benchmark: on-device compaction vs shipping the trace.
+
+The point of the threshold+compaction kernel is transport: a device
+cannot return a ragged event list, so without compaction the host must
+pull the full per-frame SPL trace — ``frames_per_record`` float32 per
+record — and run detection itself.  With compaction only the
+count-prefixed encoding crosses back: 4 B of count plus
+``capacity x 4`` float32 row slots per record, independent of the
+record length.  DEPAM records are minutes long (a paper set-1 record is
+15k+ frames), so the encoding is the difference between kilobytes and
+tens of bytes per record on the device->host link.
+
+This benchmark drives the Pallas kernel and the XLA fallback over the
+same synthetic SPL workload and reports µs/record and detected
+events/s for both, plus the readback bytes of each transport shape
+(counted on the actual output/trace arrays).  It **asserts** the two
+backends agree bitwise — counts AND rows, the same gate
+tests/test_events.py pins against the NumPy oracle — and that the
+compacted encoding ships at least ``min_byte_ratio``x fewer bytes than
+the dense trace (structural, timing-free).
+
+  PYTHONPATH=src:. python benchmarks/events.py [--smoke]
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.kernels import events as events_kernel
+
+
+def make_workload(n_records: int, n_frames: int, seed: int = 5):
+    """SPL traces with pulse-train structure (~8 events/record) over a
+    quiet floor, so the detector does representative work."""
+    rng = np.random.default_rng(seed)
+    spl = rng.standard_normal((n_records, n_frames)) \
+        .astype(np.float32) * 1.5 - 40.0
+    period = max(n_frames // 8, 4)
+    for s in range(period // 2, n_frames - 4, period):
+        spl[:, s:s + 3] += 50.0
+    pk = rng.integers(0, 129, (n_records, n_frames)).astype(np.int32)
+    return spl, pk
+
+
+def _time(fn, spl, pk, iters, **kw):
+    out = fn(spl, pk, **kw)
+    jax.block_until_ready(out)                      # compile + warm
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(spl, pk, **kw))
+        ts.append(time.perf_counter() - t0)
+    return out, float(np.median(ts))
+
+
+def run(n_records=256, n_frames=15353, capacity=16, iters=3,
+        min_byte_ratio=50.0):
+    kw = dict(threshold_db=0.0, hysteresis_db=3.0, min_len=1,
+              capacity=capacity)
+    spl_h, pk_h = make_workload(n_records, n_frames)
+    spl, pk = jnp.asarray(spl_h), jnp.asarray(pk_h)
+
+    (kc, kr), t_pallas = _time(events_kernel.detect_events, spl, pk,
+                               iters, **kw)
+    (xc, xr), t_xla = _time(events_kernel.detect_events_xla, spl, pk,
+                            iters, **kw)
+    assert np.array_equal(np.asarray(kc), np.asarray(xc)), \
+        "pallas counts diverged from the XLA fallback"
+    assert np.array_equal(np.asarray(kr), np.asarray(xr)), \
+        "pallas rows diverged from the XLA fallback"
+
+    n_events = int(np.asarray(kc).sum())
+    assert n_events >= n_records, "workload degenerated: too few events"
+
+    # transport accounting on the REAL arrays, not the formula
+    ragged_bytes = np.asarray(kc).nbytes + np.asarray(kr).nbytes
+    trace_bytes = spl_h.nbytes + pk_h.nbytes     # host-side detection
+    ratio = trace_bytes / ragged_bytes
+    assert ratio >= min_byte_ratio, \
+        f"compaction win regressed: trace {trace_bytes} B vs ragged " \
+        f"{ragged_bytes} B — only {ratio:.1f}x (< {min_byte_ratio}x)"
+
+    rows = []
+    for name, t in (("events/detect_pallas", t_pallas),
+                    ("events/detect_xla", t_xla)):
+        rows.append(common.row(
+            name, t / n_records * 1e6,
+            f"records_per_s={n_records / t:.0f};"
+            f"events_per_s={n_events / t:.0f};"
+            + (f"bytes_per_record_ragged={ragged_bytes / n_records:.0f};"
+               f"bytes_per_record_trace={trace_bytes / n_records:.0f};"
+               f"byte_reduction={ratio:.1f}x;bitwise_equal=yes"
+               if name.endswith("pallas") else "")))
+    return rows
+
+
+if __name__ == "__main__":
+    if "--smoke" in sys.argv:
+        # CI gate: bitwise identity and the transport byte ratio are
+        # deterministic; wall-clock is reported but never gated
+        rows = run(n_records=32, n_frames=2048, iters=1,
+                   min_byte_ratio=10.0)
+    else:
+        rows = run()
+    print("\n".join(rows))

@@ -1,12 +1,12 @@
 """Benchmark aggregator — one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV and writes the consolidated
-perf-trajectory snapshot ``BENCH_PR6.json`` at the repo root: one entry
+perf-trajectory snapshot ``BENCH_PR7.json`` at the repo root: one entry
 per benchmark with µs/call plus every derived metric (records/s,
-host→device bytes/record, file opens/step, step-latency percentiles,
-compile-cache hits, speedups...), so future PRs can diff against a
-recorded baseline instead of re-deriving one (``BENCH_PR5.json``
-remains as the previous PR's recorded numbers).
+host→device bytes/record, events/s, file opens/step, step-latency
+percentiles, compile-cache hits, speedups...), so future PRs can diff
+against a recorded baseline instead of re-deriving one
+(``BENCH_PR6.json`` remains as the previous PR's recorded numbers).
 Snapshots are keyed by config (``fast`` vs ``full``) and merged into
 the existing file, so a ``--fast`` dev run never clobbers full-config
 baseline numbers with non-comparable ones.
@@ -47,7 +47,7 @@ def main() -> None:
     fast = "--fast" in sys.argv
     rows = ["name,us_per_call,derived"]
 
-    from benchmarks import async_pipeline, fig3_1_single_node, \
+    from benchmarks import async_pipeline, events, fig3_1_single_node, \
         fig3_2_speedup, job_pipeline, serve_multitenant, \
         table2_1_param_sets, roofline_report, transfer, wav_io, \
         windowed_agg
@@ -72,6 +72,10 @@ def main() -> None:
                              record_sec=0.25 if fast else 0.5,
                              window=5 if fast else 10,
                              iters=1 if fast else 2)
+    rows += events.run(n_records=32 if fast else 256,
+                       n_frames=2048 if fast else 15353,
+                       iters=1 if fast else 3,
+                       min_byte_ratio=10.0 if fast else 50.0)
     rows += serve_multitenant.run(
         n_tenants=3 if fast else 4,
         file_records=(4, 4) if fast else (8, 8, 8),
@@ -82,7 +86,7 @@ def main() -> None:
     print("\n".join(rows))
 
     out_path = os.path.abspath(os.path.join(
-        os.path.dirname(__file__), os.pardir, "BENCH_PR6.json"))
+        os.path.dirname(__file__), os.pardir, "BENCH_PR7.json"))
     snapshot: dict = {}
     if os.path.exists(out_path):
         try:

@@ -47,13 +47,14 @@ from .engine import ExecOptions
 from .features import (FeatureContext, FeatureSpec, Reduction, StateField,
                        Window, EPOCH_WINDOW, JOB_WINDOW, mean_reduction,
                        SPD_DB_MAX, SPD_DB_MIN, SPD_DB_STEP, SPD_N_DB,
-                       SPECTRUM_PERCENTILES, feature_names, get_feature,
+                       SPECTRUM_PERCENTILES, EVENT_COLUMNS,
+                       IMPULSIVE_COLUMNS, feature_names, get_feature,
                        register, resolve_features, unregister)
 from .sources import (PrefetchSource, ReaderSource, Source, SynthSource,
                       WavSource, as_source)
 from repro.data.wavio import scan_dataset
-from .sinks import (AsyncSink, CallbackSink, MemorySink, Sink, StoreSink,
-                    as_sink)
+from .sinks import (AsyncSink, CallbackSink, EventLog, MemorySink, Sink,
+                    StoreSink, as_sink)
 from .job import JobResult, SoundscapeJob, job
 
 __all__ = [
@@ -61,11 +62,12 @@ __all__ = [
     "FeatureContext", "FeatureSpec", "Reduction", "StateField", "Window",
     "EPOCH_WINDOW", "JOB_WINDOW", "mean_reduction",
     "SPD_DB_MAX", "SPD_DB_MIN", "SPD_DB_STEP", "SPD_N_DB",
-    "SPECTRUM_PERCENTILES", "feature_names", "get_feature", "register",
+    "SPECTRUM_PERCENTILES", "EVENT_COLUMNS", "IMPULSIVE_COLUMNS",
+    "feature_names", "get_feature", "register",
     "resolve_features", "unregister",
     "Source", "SynthSource", "ReaderSource", "WavSource", "PrefetchSource",
     "as_source", "scan_dataset",
     "Sink", "MemorySink", "StoreSink", "CallbackSink", "AsyncSink",
-    "as_sink",
+    "EventLog", "as_sink",
     "SoundscapeJob", "JobResult", "job",
 ]

@@ -126,6 +126,16 @@ def compile_step(specs: tuple[FeatureSpec, ...], m: DatasetManifest,
     def features_out(ctx, lead, mask):
         out = {}
         for s in specs:
+            if s.ragged:
+                # ragged feature: compute returns (counts, rows);
+                # padding records are zeroed out of the counts so the
+                # host-side compaction drops their rows entirely
+                counts, rows = s.compute(ctx)
+                counts = jnp.where(mask.reshape(-1), counts, 0)
+                out[s.name] = {
+                    "counts": counts.reshape(lead),
+                    "rows": rows.reshape(lead + rows.shape[1:])}
+                continue
             val = s.compute(ctx)
             val = val.reshape(lead + val.shape[1:])
             if s.shape is None:
@@ -447,6 +457,7 @@ class JobStepper:
         self._stream = None
         self._inflight: collections.deque = collections.deque()
         self._windows_out: dict[str, np.ndarray] = {}
+        self._overflowed = False     # event-capacity warning fired once
 
     # -- lifecycle ------------------------------------------------------
     def start(self) -> "JobStepper":
@@ -455,6 +466,7 @@ class JobStepper:
         self.source = source = self.source.bind(m, p)
         self._shapes = {s.name: tuple(s.shape(m, p)) for s in self.specs
                         if s.shape is not None}
+        self._ragged = {s.name: s for s in self.specs if s.ragged}
 
         bindings, wins = resolve_bindings(self.specs, m, p, self.window)
         self._bindings = bindings
@@ -478,6 +490,12 @@ class JobStepper:
             self.sink.open_windows({
                 b.out_name: (b.n_windows,) + tuple(b.red.out_shape(m, p))
                 for b in self._windowed})
+        if self._ragged:
+            # capacity is a params knob (it keys the compiled program),
+            # so every ragged feature of a job shares p.event_capacity
+            self.sink.open_events({
+                name: (s.columns, p.event_capacity)
+                for name, s in self._ragged.items()})
         start_step, resumed = self.sink.resume_state()
         self._agg_state = _init_reduce_state(bindings, resumed)
 
@@ -591,6 +609,9 @@ class JobStepper:
         # reduction-only values never cross back to the host
         for name in self._shapes:
             out[name].copy_to_host_async()
+        for name in self._ragged:
+            out[name]["counts"].copy_to_host_async()
+            out[name]["rows"].copy_to_host_async()
         commit_state = self._agg_state if self.sink.wants_commit else None
         if commit_state is not None:
             for v in commit_state.values():
@@ -626,6 +647,33 @@ class JobStepper:
                 (-1,) + self._shapes[name])[keep]
             for name in self._shapes}
         self.sink.write(step, sel, values)
+        if self._ragged:
+            # host-side compaction: the device returned fixed-capacity
+            # slabs; only the first min(count, capacity) rows of each
+            # live record enter the append-only log (record order —
+            # boolean take over (batch, capacity) preserves it)
+            ev = {}
+            for name in self._ragged:
+                counts = np.asarray(
+                    out[name]["counts"]).reshape(-1)[keep]
+                rows = np.asarray(out[name]["rows"])
+                rows = rows.reshape((-1,) + rows.shape[-2:])[keep]
+                cap = rows.shape[1]
+                slot = np.arange(cap)[None, :] < \
+                    np.minimum(counts, cap)[:, None]
+                ev[name] = (counts.astype(np.int32),
+                            rows[slot].astype(np.float32, copy=False))
+                if not self._overflowed and (counts > cap).any():
+                    self._overflowed = True
+                    import warnings
+                    warnings.warn(
+                        f"event capacity overflow in feature {name!r}: "
+                        f"some records detected more than {cap} events; "
+                        f"only the first {cap} are kept (raise "
+                        f"DepamParams.event_capacity or the threshold). "
+                        f"Affected records have counts > capacity in "
+                        f"the event log.", RuntimeWarning, stacklevel=2)
+            self.sink.write_events(step, sel, ev)
         if commit_state is not None:
             # carry persisted in its NATIVE dtypes (float32 / int32):
             # resume casts losslessly, _finalize_rows widens to float64
@@ -642,9 +690,11 @@ class JobStepper:
         ones included) and the epoch aggregates; idempotent.
 
         Returns (features, epoch, windows, window_edges, n_records,
-        plan) — see job.JobResult.  Rows flushed mid-job came from the
-        same committed float32 state, so the job-end pass is
-        byte-identical to them.
+        events, plan) — see job.JobResult.  ``events`` is the sink's
+        materialized {name: EventLog} for ragged features (None when
+        the job has none, or the sink streams).  Rows flushed mid-job
+        came from the same committed float32 state, so the job-end
+        pass is byte-identical to them.
         """
         assert self._started, "JobStepper.finish before start()"
         if self._result is not None:
@@ -669,8 +719,9 @@ class JobStepper:
                 epoch[b.out_name] = _finalize_rows(b, host_state, 0, 1)[0]
         window_edges = {name: self._edges[name].copy()
                         for name in self._windows_out}
+        events = self.sink.event_result() if self._ragged else None
         self._result = (self.sink.result(), epoch, self._windows_out,
-                        window_edges, live, self.pl)
+                        window_edges, live, events, self.pl)
         return self._result
 
     def close(self):
@@ -711,8 +762,9 @@ def run_job(m: DatasetManifest, p: DepamParams, specs: list[FeatureSpec],
 
     ``window`` is the job's time resolution: every ``job``-window
     reduction accumulates at it (epoch — one window — when None).
-    Returns (features, epoch, windows, window_edges, n_records, plan) —
-    see job.JobResult.  This is the blocking single-tenant driver: one
+    Returns (features, epoch, windows, window_edges, n_records, events,
+    plan) — see job.JobResult.  This is the blocking single-tenant
+    driver: one
     :class:`JobStepper` run start-to-finish, with source/sink released
     in ``finally`` even when binding, sink open, resume validation, or
     any step raises mid-stream.

@@ -114,6 +114,39 @@ class FeatureContext:
         """(batch, n_frames, n_bins) per-frame PSD (the spectrogram)."""
         return self._psd("frame_psd", ops.frame_psd, spectra.frame_psd)
 
+    @property
+    def frame_spl(self) -> jnp.ndarray:
+        """(batch, n_frames) wideband SPL per analysis frame, dB — the
+        detection trace the events kernel scans.  Rides the cached
+        frame-PSD, so detection is a free rider on any job already
+        computing the spectrogram."""
+        if "frame_spl" not in self._cache:
+            p = self.params
+            power = jnp.sum(self.frame_psd, axis=-1) * p.df
+            self._cache["frame_spl"] = (
+                10.0 * jnp.log10(jnp.maximum(power, 1e-30)) + p.gain_db)
+        return self._cache["frame_spl"]
+
+    @property
+    def frame_peak_bin(self) -> jnp.ndarray:
+        """(batch, n_frames) int32 argmax PSD bin per frame."""
+        if "frame_peak_bin" not in self._cache:
+            self._cache["frame_peak_bin"] = jnp.argmax(
+                self.frame_psd, axis=-1).astype(jnp.int32)
+        return self._cache["frame_peak_bin"]
+
+    @property
+    def events(self) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Detected events, cached so ``events`` and ``impulsive`` share
+        one scan: ``(counts (batch,) int32, rows (batch, event_capacity,
+        4) float32)`` with rows ``(onset_frame, n_frames, peak_bin,
+        peak_db)``.  Thresholds come off ``ctx.params``."""
+        if "events" not in self._cache:
+            self._cache["events"] = ops.detect_events(
+                self.frame_spl, self.frame_peak_bin, self.params,
+                kernel=self.use_kernels)
+        return self._cache["events"]
+
 
 # ---------------------------------------------------------------------------
 # Windows & reductions — the multi-resolution reduction protocol.
@@ -273,7 +306,18 @@ class Reduction:
 
 @dataclasses.dataclass(frozen=True)
 class FeatureSpec:
-    """A registered feature workload (see module docstring)."""
+    """A registered feature workload (see module docstring).
+
+    ``ragged=True`` marks the third output kind beside fixed-shape and
+    reduction-only: ``compute`` returns a count-prefixed pair
+    ``(counts (batch,) int32, rows (batch, capacity, len(columns))
+    float32)`` instead of a dense array.  ``counts`` is the TRUE
+    per-record event count (``counts > capacity`` flags overflow), and
+    the engine routes the host-compacted rows to the sink's append-only
+    event log rather than a per-record memmap.  Ragged specs must name
+    their ``columns`` and cannot also declare reductions or a dense
+    ``shape``.
+    """
 
     name: str
     shape: Callable[[DatasetManifest, DepamParams],
@@ -282,7 +326,23 @@ class FeatureSpec:
     fill: float = 0.0
     setup: Callable[[DatasetManifest, DepamParams], dict] | None = None
     reductions: tuple[Reduction, ...] = ()
+    ragged: bool = False
+    columns: tuple[str, ...] = ()
     doc: str = ""
+
+    def __post_init__(self):
+        if self.ragged:
+            if not self.columns:
+                raise ValueError(
+                    f"ragged feature {self.name!r} must declare columns")
+            if self.shape is not None or self.reductions:
+                raise ValueError(
+                    f"ragged feature {self.name!r} cannot also declare a "
+                    f"dense shape or reductions")
+        elif self.columns:
+            raise ValueError(
+                f"feature {self.name!r}: columns= is only meaningful "
+                f"with ragged=True")
 
 
 _REGISTRY: dict[str, FeatureSpec] = {}
@@ -527,3 +587,97 @@ register(FeatureSpec(
                 _extremum_reduction("max_welch", "max")),
     doc="Windowed min/max Welch spectrum per frequency bin (soundscape "
         "envelope statistics)."))
+
+
+# ---------------------------------------------------------------------------
+# Ragged detection workloads (pypam loud_event_detector / pile-driving
+# impulsive metrics).  Both ride the cached frame-PSD trace and share
+# ONE threshold+compaction scan via ctx.events, so selecting both costs
+# a single detection pass.
+# ---------------------------------------------------------------------------
+
+EVENT_COLUMNS = ("onset", "duration", "peak_bin", "peak_db")
+IMPULSIVE_COLUMNS = ("sel", "peak", "kurtosis", "rise_time")
+
+
+register(FeatureSpec(
+    name="events",
+    shape=None,
+    compute=lambda ctx: ctx.events,
+    ragged=True,
+    columns=EVENT_COLUMNS,
+    doc="Loud-event windows per record (pypam loud_event_detector): "
+        "Schmitt-trigger detection over the per-frame wideband SPL, "
+        "rows = (onset_frame, n_frames, peak_bin, peak_db)."))
+
+
+def _impulsive_compute(ctx: FeatureContext):
+    """Per-event impulsive metrics from the raw waveform (pypam
+    pile-driving suite): SEL, zero-to-peak level, kurtosis, rise time.
+
+    Each detected event's sample span is [onset*hop,
+    (onset+dur-1)*hop + window_size) clipped to the record — the samples
+    its SPL frames actually covered.  The moment sums go through
+    einsum (gemm) over a (batch, capacity, record_size) span mask
+    rather than fused elementwise reductions: XLA materializes gemm
+    operands, so the accumulation order cannot change with the
+    surrounding program — that is what keeps the int16-payload program
+    (decode multiply in-graph) bitwise-identical to the float32 one.
+    Kurtosis therefore uses the algebraic central-moment identities
+    over raw power sums (fine in float32 here: events are zero-mean-ish
+    acoustic pressure, so the cancellation is mild, and the test oracle
+    is float64).  O(capacity) memory blow-up over the waveform —
+    fine at engine chunk sizes, entirely on-device, so only capacity
+    rows come home.
+    """
+    p = ctx.params
+    counts, rows = ctx.events
+    x = ctx.records                                   # (B, N) float32
+    n = x.shape[-1]
+    k = p.event_capacity
+    onset = rows[..., 0].astype(jnp.int32)            # (B, K) frames
+    dur = rows[..., 1].astype(jnp.int32)
+    valid = jnp.arange(k, dtype=jnp.int32)[None, :] \
+        < jnp.minimum(counts, k)[:, None]
+    s0 = onset * p.hop                                # first sample
+    s1 = jnp.minimum((onset + dur - 1) * p.hop + p.window_size,
+                     n)                               # one past last
+    idx = jnp.arange(n, dtype=jnp.int32)[None, None, :]
+    span = ((idx >= s0[..., None]) & (idx < s1[..., None])
+            & valid[..., None])                       # (B, K, N) bool
+    spanf = span.astype(jnp.float32)
+    x2 = x * x
+    pows = (x, x2, x2 * x, x2 * x2)
+    ns, (S1, S2, S3, S4) = jnp.einsum('bkn->bk', spanf), tuple(
+        jnp.einsum('bn,bkn->bk', v, spanf) for v in pows)
+    nz = jnp.maximum(ns, 1.0)
+    # SEL: 10 log10( integral of x^2 dt ), dB re 1 uPa^2 s
+    sel = 10.0 * jnp.log10(jnp.maximum(S2 / jnp.float32(p.fs),
+                                       1e-30)) + p.gain_db
+    # zero-to-peak level
+    x2m = jnp.where(span, x2[:, None, :], 0.0)
+    pk2 = jnp.max(x2m, axis=-1)
+    peak = 10.0 * jnp.log10(jnp.maximum(pk2, 1e-30)) + p.gain_db
+    # kurtosis (m4/m2^2, non-Fisher) via central-moment identities
+    mean = S1 / nz
+    m2 = S2 / nz - mean * mean
+    m4 = (S4 / nz - 4.0 * mean * (S3 / nz)
+          + 6.0 * (mean * mean) * (S2 / nz)
+          - 3.0 * (mean * mean) * (mean * mean))
+    kurt = m4 / jnp.maximum(m2 * m2, 1e-30)
+    # rise time: onset sample -> absolute-peak sample, seconds
+    rise = (jnp.argmax(x2m, axis=-1).astype(jnp.float32)
+            - s0.astype(jnp.float32)) / jnp.float32(p.fs)
+    vals = jnp.stack([sel, peak, kurt, rise], axis=-1)
+    return counts, jnp.where(valid[..., None], vals, 0.0)
+
+
+register(FeatureSpec(
+    name="impulsive",
+    shape=None,
+    compute=_impulsive_compute,
+    ragged=True,
+    columns=IMPULSIVE_COLUMNS,
+    doc="Per-event impulsive metrics from the raw waveform (pypam "
+        "pile-driving suite): SEL (dB re 1 uPa^2 s), zero-to-peak level "
+        "(dB), kurtosis (m4/m2^2), rise time (s)."))

@@ -40,7 +40,7 @@ from .sources import PrefetchSource, Source, as_source
 class JobResult:
     """Outputs of one SoundscapeJob run.
 
-    Three output namespaces, one per time resolution:
+    Four output namespaces:
 
       * ``features`` — feature name -> (n_records, *shape) per-record
         array (None for streaming sinks);
@@ -48,9 +48,13 @@ class JobResult:
         array (LTSA panels, SPD histograms, spectrum extrema), with
         ``window_edges[name]`` giving the (n_windows + 1,) record-offset
         boundaries for the time axis;
-      * ``epoch`` — whole-epoch aggregates such as ``mean_welch``.
+      * ``epoch`` — whole-epoch aggregates such as ``mean_welch``;
+      * ``events`` — ragged feature name ->
+        :class:`~repro.api.sinks.EventLog` (per-record TRUE counts +
+        kept rows); None when the job selects no ragged features or
+        the sink streams.
 
-    ``result[name]`` looks up all three; a name present in more than
+    ``result[name]`` looks up all four; a name present in more than
     one namespace raises instead of silently preferring one.
     """
 
@@ -60,10 +64,12 @@ class JobResult:
     window_edges: dict[str, np.ndarray]
     n_records: int
     plan: ShardPlan
+    events: dict | None = None
 
     def __getitem__(self, name: str):
         spaces = [("features", self.features or {}),
-                  ("epoch", self.epoch), ("windows", self.windows)]
+                  ("epoch", self.epoch), ("windows", self.windows),
+                  ("events", self.events or {})]
         hits = [(label, d[name]) for label, d in spaces if name in d]
         if len(hits) > 1:
             raise KeyError(
@@ -74,8 +80,9 @@ class JobResult:
             return hits[0][1]
         raise KeyError(
             f"{name!r} not in features {sorted(self.features or ())}, "
-            f"epoch {sorted(self.epoch)}, or windows "
-            f"{sorted(self.windows)}")
+            f"epoch {sorted(self.epoch)}, windows "
+            f"{sorted(self.windows)}, or events "
+            f"{sorted(self.events or ())}")
 
 
 class SoundscapeJob:
@@ -154,6 +161,34 @@ class SoundscapeJob:
     def kernels(self, enabled: bool) -> "SoundscapeJob":
         """Toggle the Pallas kernel path (True) vs XLA fallback."""
         self._use_kernels = bool(enabled)
+        return self
+
+    def events(self, threshold_db: float | None = None, *,
+               hysteresis_db: float | None = None,
+               min_len: int | None = None,
+               capacity: int | None = None,
+               impulsive: bool = False) -> "SoundscapeJob":
+        """Add loud-event detection to the job.
+
+        Appends the ragged ``events`` feature (and ``impulsive`` per-
+        event metrics when ``impulsive=True``) to the selection and
+        overrides the detection knobs on the job's params — they live
+        on :class:`DepamParams` so the compiled program is keyed by
+        them.  Omitted knobs keep the params' current values.
+        """
+        overrides = {k: v for k, v in (
+            ("event_threshold_db", threshold_db),
+            ("event_hysteresis_db", hysteresis_db),
+            ("event_min_len", min_len),
+            ("event_capacity", capacity)) if v is not None}
+        if overrides:
+            self._p = dataclasses.replace(self._p, **overrides)
+        names = {s.name if isinstance(s, FeatureSpec) else s
+                 for s in self._features}
+        if "events" not in names:
+            self._features.append("events")
+        if impulsive and "impulsive" not in names:
+            self._features.append("impulsive")
         return self
 
     def payload(self, dtype: str) -> "SoundscapeJob":
@@ -269,11 +304,11 @@ class SoundscapeJob:
             self._max_steps, self._exec, self._window, compiler=compiler)
 
     def run(self) -> JobResult:
-        features, epoch, windows, edges, n_records, pl_ = engine.drive(
-            self._stepper())
+        features, epoch, windows, edges, n_records, events, pl_ = \
+            engine.drive(self._stepper())
         return JobResult(features=features, epoch=epoch, windows=windows,
                          window_edges=edges, n_records=n_records,
-                         plan=pl_)
+                         events=events, plan=pl_)
 
     def submit(self, service, *, name: str | None = None,
                weight: float = 1.0, quantum: int | None = None):

@@ -33,12 +33,22 @@ including the window rows flushed before it.
 writer thread while preserving exactly that ordering, so the driver can
 dispatch the next device step instead of blocking on sink IO.
 
+Ragged (event) outputs arrive through a third pair of hooks:
+``open_events`` declares ``{feature: (columns, capacity)}`` layouts and
+``write_events(step, indices, values)`` delivers each step's
+host-compacted event log slice — per-record TRUE counts plus the kept
+rows, append-only in record order.  The same commit contract covers
+them: ``commit(step=k)`` makes every event row written for steps <= k
+durable, and the resumable store keeps its own per-log row cursor so a
+crash between write and commit never duplicates or tears an event.
+
 ``as_sink`` normalizes what users pass to ``SoundscapeJob.to()``: ``None``
 -> in-memory arrays, a path string or ``FeatureStore`` -> the resumable
 store, a callable -> streaming callback, a ``Sink`` -> itself.
 """
 from __future__ import annotations
 
+import dataclasses
 import queue
 import threading
 from typing import Callable
@@ -48,6 +58,50 @@ import numpy as np
 from repro.core.manifest import DatasetManifest, ShardPlan
 from repro.core.params import DepamParams
 from repro.core.store import FeatureStore
+
+
+@dataclasses.dataclass
+class EventLog:
+    """A materialized ragged event log (``JobResult.events`` values).
+
+    ``counts[i]`` is the TRUE number of events detected in record ``i``
+    (``counts[i] > capacity`` flags overflow — the first ``capacity``
+    rows were kept, the rest dropped loudly, never silently).  ``rows``
+    concatenates the kept rows of every record in record order; use
+    :meth:`record` / :attr:`offsets` to slice per record.
+    """
+
+    counts: np.ndarray            # (n_records,) int32, TRUE counts
+    rows: np.ndarray              # (n_kept_total, len(columns)) float32
+    columns: tuple[str, ...]
+    capacity: int
+
+    @property
+    def kept(self) -> np.ndarray:
+        """(n_records,) rows actually stored: min(counts, capacity)."""
+        return np.minimum(self.counts, self.capacity)
+
+    @property
+    def offsets(self) -> np.ndarray:
+        """(n_records + 1,) row offsets: record i owns
+        rows[offsets[i]:offsets[i+1]]."""
+        return np.concatenate([[0], np.cumsum(self.kept)]).astype(np.int64)
+
+    @property
+    def overflow(self) -> np.ndarray:
+        """(n_records,) bool — records whose events exceeded capacity."""
+        return self.counts > self.capacity
+
+    @property
+    def n_events(self) -> int:
+        return int(self.kept.sum())
+
+    def record(self, i: int) -> np.ndarray:
+        o = self.offsets
+        return self.rows[o[i]:o[i + 1]]
+
+    def column(self, name: str) -> np.ndarray:
+        return self.rows[:, self.columns.index(name)]
 
 
 class Sink:
@@ -91,6 +145,32 @@ class Sink:
         ascending order within each output."""
         pass
 
+    def open_events(self, layouts: dict[str, tuple[tuple[str, ...],
+                                                   int]]) -> None:
+        """Ragged-output layout, ``{feature: (columns, capacity)}`` —
+        called once right after ``open`` when the job selects ragged
+        features.  Default: ignore (the engine still returns the logs
+        in ``JobResult.events`` for materializing sinks)."""
+        pass
+
+    def write_events(self, step: int, indices: np.ndarray,
+                     values: dict[str, tuple[np.ndarray,
+                                             np.ndarray]]) -> None:
+        """One step's event-log slice: ``values`` maps feature name to
+        ``(counts, rows)`` where ``counts`` aligns with ``indices``
+        (TRUE per-record counts, int32) and ``rows`` is the
+        host-compacted ``(sum(min(counts, capacity)), n_cols)`` float32
+        block, in record order.  Appends-only: steps arrive in
+        ascending order and the engine never rewrites a record's
+        events, so the durable log is a pure prefix property of the
+        committed cursor."""
+        pass
+
+    def event_result(self) -> dict[str, EventLog] | None:
+        """Materialized event logs keyed by feature, or None for
+        streaming sinks."""
+        return None
+
     def commit(self, plan: ShardPlan, step: int,
                agg: dict[str, np.ndarray], live: float) -> None:
         pass
@@ -112,10 +192,38 @@ class MemorySink(Sink):
 
     def __init__(self):
         self.arrays: dict[str, np.ndarray] | None = None
+        self._n_records = 0
+        self._events: dict[str, dict] = {}
 
     def open(self, m, p, shapes, plan):
+        self._n_records = m.n_records
+        self._events = {}
         self.arrays = {name: np.zeros((m.n_records,) + shape, np.float32)
                        for name, shape in shapes.items()}
+
+    def open_events(self, layouts):
+        self._events = {
+            name: {"columns": cols, "capacity": cap,
+                   "counts": np.zeros(self._n_records, np.int32),
+                   "rows": []}
+            for name, (cols, cap) in layouts.items()}
+
+    def write_events(self, step, indices, values):
+        for name, (counts, rows) in values.items():
+            ev = self._events[name]
+            ev["counts"][indices] = counts
+            ev["rows"].append(np.asarray(rows, np.float32))
+
+    def event_result(self):
+        out = {}
+        for name, ev in self._events.items():
+            n_cols = len(ev["columns"])
+            rows = (np.concatenate(ev["rows"]) if ev["rows"]
+                    else np.zeros((0, n_cols), np.float32))
+            out[name] = EventLog(counts=ev["counts"], rows=rows,
+                                 columns=ev["columns"],
+                                 capacity=ev["capacity"])
+        return out
 
     def write(self, step, indices, values):
         for name, vals in values.items():
@@ -141,9 +249,12 @@ class StoreSink(Sink):
         self.arrays: dict[str, np.memmap] | None = None
         self.window_arrays: dict[str, np.memmap] = {}
         self._plan: ShardPlan | None = None
+        self._n_records = 0
+        self._event_meta: dict[str, tuple[tuple[str, ...], int]] = {}
 
     def open(self, m, p, shapes, plan):
         self._plan = plan
+        self._n_records = m.n_records
         committed = self.store.committed_steps(plan)
         if committed > 0:
             # The cursor covers steps a just-added feature never ran
@@ -168,6 +279,41 @@ class StoreSink(Sink):
         # content from the carry state the cursor committed, not from
         # these arrays, so stale trailing rows are simply overwritten.
         self.window_arrays = self.store.open_arrays(shapes, extend=True)
+
+    def open_events(self, layouts):
+        committed = self.store.committed_steps(self._plan)
+        if committed > 0:
+            # Same guard as dense features in open(): a ragged feature
+            # added after the cursor advanced has no rows for the
+            # committed prefix — resuming would publish a silently
+            # truncated log.
+            missing = sorted(n for n in layouts
+                             if not self.store.event_log_exists(n))
+            if missing:
+                raise ValueError(
+                    f"cannot resume: event logs {missing} have no data "
+                    f"for the {committed} already-committed steps "
+                    f"(added after the store was written?); use a fresh "
+                    f"store directory or drop them from the job")
+        self._event_meta = dict(layouts)
+        self.store.open_events(
+            {name: (self._n_records, len(cols))
+             for name, (cols, _cap) in layouts.items()})
+
+    def write_events(self, step, indices, values):
+        for name, (counts, rows) in values.items():
+            self.store.append_events(name, indices, counts, rows)
+
+    def event_result(self):
+        out = {}
+        for name, (cols, cap) in self._event_meta.items():
+            counts, rows = self.store.read_events(name)
+            out[name] = EventLog(counts=counts, rows=rows,
+                                 columns=cols, capacity=cap)
+        return out
+
+    def close(self):
+        self.store.close_events()
 
     def write_windows(self, name, start, values):
         self.window_arrays[name][start:start + len(values)] = values
@@ -205,9 +351,12 @@ class CallbackSink(Sink):
 
     def __init__(self, fn: Callable[[int, np.ndarray, dict], None],
                  on_windows: Callable[[str, int, np.ndarray],
-                                      None] | None = None):
+                                      None] | None = None,
+                 on_events: Callable[[int, np.ndarray, dict],
+                                     None] | None = None):
         self.fn = fn
         self.on_windows = on_windows
+        self.on_events = on_events
         # mid-job window flushes ride commit boundaries; opt into them
         # when the callback wants windows streamed as they close
         self.wants_commit = on_windows is not None
@@ -218,6 +367,10 @@ class CallbackSink(Sink):
     def write_windows(self, name, start, values):
         if self.on_windows is not None:
             self.on_windows(name, start, values)
+
+    def write_events(self, step, indices, values):
+        if self.on_events is not None:
+            self.on_events(step, indices, values)
 
 
 class AsyncSink(Sink):
@@ -276,6 +429,8 @@ class AsyncSink(Sink):
                         self.inner.write(*args)
                     elif op == "windows":
                         self.inner.write_windows(*args)
+                    elif op == "events":
+                        self.inner.write_events(*args)
                     else:
                         self.inner.commit(*args)
                 except BaseException as e:     # noqa: BLE001
@@ -309,6 +464,9 @@ class AsyncSink(Sink):
     def open_windows(self, shapes):
         self.inner.open_windows(shapes)
 
+    def open_events(self, layouts):
+        self.inner.open_events(layouts)
+
     def resume_state(self):
         return self.inner.resume_state()
 
@@ -328,6 +486,14 @@ class AsyncSink(Sink):
         self._raise_pending()
         self._q.put(("windows", (name, start, values)))
 
+    def write_events(self, step, indices, values):
+        # FIFO again: the store's append position at commit(step=k)
+        # time is exactly the rows of steps <= k, so the row cursor the
+        # commit records can never cover an unwritten (or skip a
+        # written) event
+        self._raise_pending()
+        self._q.put(("events", (step, indices, values)))
+
     def commit(self, plan, step, agg, live):
         self._raise_pending()
         self._q.put(("commit", (plan, step, agg, live)))
@@ -341,6 +507,10 @@ class AsyncSink(Sink):
     def result(self):
         self.flush()
         return self.inner.result()
+
+    def event_result(self):
+        self.flush()
+        return self.inner.event_result()
 
     def close(self):
         """Drain the queue, stop the worker, close the inner sink —

@@ -30,12 +30,30 @@ class DepamParams:
     gain_db: float = 0.0
     # Third-octave bands: IEC 61260 base-10 nominal bands within [tol_fmin, fs/2).
     tol_fmin: float = 10.0
+    # Event detection (the ragged 'events'/'impulsive' features): a frame
+    # opens an event when its wideband SPL reaches event_threshold_db and
+    # the event closes at the first frame below threshold - hysteresis
+    # (or at the record end).  Events shorter than event_min_len frames
+    # are dropped; at most event_capacity rows are kept per record (the
+    # TRUE count is always recorded, so overflow is detectable).  These
+    # live here — not on the feature spec — so they key the compile
+    # caches and same-config tenants share one program.
+    event_threshold_db: float = 60.0
+    event_hysteresis_db: float = 3.0
+    event_min_len: int = 1
+    event_capacity: int = 16
 
     def __post_init__(self) -> None:
         if self.window_size > self.nfft:
             raise ValueError("window_size must be <= nfft (zero-padded FFT)")
         if not 0 <= self.window_overlap < self.window_size:
             raise ValueError("window_overlap must be in [0, window_size)")
+        if self.event_hysteresis_db < 0:
+            raise ValueError("event_hysteresis_db must be >= 0")
+        if self.event_min_len < 1:
+            raise ValueError("event_min_len must be >= 1")
+        if self.event_capacity < 1:
+            raise ValueError("event_capacity must be >= 1")
 
     @property
     def hop(self) -> int:

@@ -30,6 +30,7 @@ class FeatureStore:
         self.root = root
         os.makedirs(root, exist_ok=True)
         self._arrays: dict[str, np.memmap] | None = None
+        self._events: dict[str, dict] | None = None
 
     # -- result arrays ------------------------------------------------
     def _array_path(self, name: str) -> str:
@@ -103,6 +104,98 @@ class FeatureStore:
             spec["tol"] = (m.n_records, make_band_matrix(p).shape[1])
         return self.open_arrays(spec)
 
+    # -- event logs ---------------------------------------------------
+    # A ragged feature stores two files: ``<name>.counts.npy`` — an
+    # (n_records,) int32 memmap of TRUE per-record event counts — and
+    # ``<name>.events.bin`` — the kept rows as raw float32, append-only
+    # in record order.  The durable length of the bin is NOT its file
+    # size but the per-log row cursor committed in cursor.json
+    # ("events": {name: n_rows}); open_events truncates the bin back to
+    # that cursor, so rows appended (or half-appended) by a crashed run
+    # vanish and a resumed job re-appends them exactly once.
+
+    def _event_counts_path(self, name: str) -> str:
+        return os.path.join(self.root, f"{name}.counts.npy")
+
+    def _event_rows_path(self, name: str) -> str:
+        return os.path.join(self.root, f"{name}.events.bin")
+
+    def event_log_exists(self, name: str) -> bool:
+        return os.path.exists(self._event_rows_path(name))
+
+    def open_events(self, layouts: dict[str, tuple[int, int]]) -> None:
+        """Open (or create) the event logs: ``{name: (n_records,
+        n_cols)}``.  Truncates each rows file to its committed length
+        (see above) — call before writing, never after."""
+        st = self.load_cursor() or {}
+        committed = st.get("events", {})
+        self._events = {}
+        for name, (n_records, n_cols) in layouts.items():
+            cpath = self._event_counts_path(name)
+            if os.path.exists(cpath):
+                counts = np.lib.format.open_memmap(cpath, mode="r+")
+                if tuple(counts.shape) != (n_records,) \
+                        or counts.dtype != np.int32:
+                    raise ValueError(
+                        f"event-log layout mismatch for {name!r}: on "
+                        f"disk {counts.dtype}{tuple(counts.shape)}, "
+                        f"requested int32({n_records},)")
+            else:
+                counts = np.lib.format.open_memmap(
+                    cpath, mode="w+", dtype=np.int32, shape=(n_records,))
+            rows_committed = int(committed.get(name, 0))
+            rpath = self._event_rows_path(name)
+            if not os.path.exists(rpath):
+                open(rpath, "xb").close()
+            f = open(rpath, "r+b")
+            want = rows_committed * n_cols * 4
+            f.truncate(want)
+            f.seek(want)
+            self._events[name] = {"counts": counts, "file": f,
+                                  "n_cols": n_cols,
+                                  "rows": rows_committed}
+
+    def append_events(self, name: str, indices: np.ndarray,
+                      counts: np.ndarray, rows: np.ndarray) -> None:
+        """One step's slice: TRUE counts for ``indices`` plus the kept
+        rows, appended at the current end of the log."""
+        ev = self._events[name]
+        ev["counts"][indices] = counts
+        ev["file"].write(
+            np.ascontiguousarray(rows, np.float32).tobytes())
+        ev["rows"] += len(rows)
+
+    def read_events(self, name: str) -> tuple[np.ndarray, np.ndarray]:
+        """(counts, rows) of an OPEN log — includes appended rows that
+        are not yet covered by a commit (the engine only reads after
+        the final commit)."""
+        ev = self._events[name]
+        ev["file"].flush()
+        with open(self._event_rows_path(name), "rb") as f:
+            buf = f.read(ev["rows"] * ev["n_cols"] * 4)
+        rows = np.frombuffer(buf, np.float32).reshape(-1, ev["n_cols"])
+        return np.asarray(ev["counts"]).copy(), rows.copy()
+
+    def load_events(self, name: str,
+                    n_cols: int) -> tuple[np.ndarray, np.ndarray]:
+        """Read a COMMITTED log from disk (no open_events needed):
+        only the rows the cursor covers, which is all a crashed run
+        durably produced."""
+        st = self.load_cursor() or {}
+        n_rows = int(st.get("events", {}).get(name, 0))
+        counts = np.asarray(np.lib.format.open_memmap(
+            self._event_counts_path(name), mode="r")).copy()
+        with open(self._event_rows_path(name), "rb") as f:
+            buf = f.read(n_rows * n_cols * 4)
+        return counts, np.frombuffer(
+            buf, np.float32).reshape(-1, n_cols).copy()
+
+    def close_events(self) -> None:
+        if self._events:
+            for ev in self._events.values():
+                ev["file"].close()
+        self._events = None
+
     # -- cursor -------------------------------------------------------
     def _cursor_path(self) -> str:
         return os.path.join(self.root, "cursor.json")
@@ -132,6 +225,24 @@ class FeatureStore:
                           "n_shards": plan.n_shards,
                           "chunk_records": plan.chunk_records},
                  "live": live}
+        if self._events:
+            # event rows become durable BEFORE the cursor that covers
+            # them is renamed in; the recorded row counts are exactly
+            # what append_events has applied so far (FIFO sinks
+            # guarantee that is the rows of steps <= this one)
+            for ev in self._events.values():
+                ev["counts"].flush()
+                ev["file"].flush()
+                os.fsync(ev["file"].fileno())
+            state["events"] = {name: ev["rows"]
+                               for name, ev in self._events.items()}
+        else:
+            # a commit from a job without open logs must not orphan an
+            # existing log's cursor — later opens would truncate to 0
+            # under counts that still claim events
+            prev = self.load_cursor()
+            if prev and "events" in prev:
+                state["events"] = prev["events"]
         if agg:
             fname = f"agg-{cursor}.npz"
             tmp = os.path.join(self.root, fname + ".tmp")

@@ -1,0 +1,187 @@
+"""Threshold + compaction kernel: frame SPL -> ragged event rows.
+
+The detection workload PAM pipelines are actually run for (pypam's
+``loud_event_detector`` / pile-driving analyses) produces a *variable*
+number of events per record.  Devices cannot return ragged arrays, so
+this kernel emits the standard count-prefixed fixed-capacity encoding:
+
+  * ``counts``  — ``(batch,)`` int32, the TRUE number of qualifying
+    events per record (NOT capped — ``counts > capacity`` is the
+    per-record overflow flag, so capping is loud, never silent);
+  * ``rows``    — ``(batch, capacity, 4)`` float32, the first
+    ``min(count, capacity)`` events per record as
+    ``(onset_frame, n_frames, peak_bin, peak_db)`` rows; unused slots
+    are zero.
+
+Detection semantics (a Schmitt trigger over the per-frame wideband SPL):
+a frame OPENS an event when ``spl >= threshold_db`` and no event is
+open; an open event CLOSES at the first frame with
+``spl < threshold_db - hysteresis_db`` (duration excludes that frame) or
+at the record end (events touching the record edge close there — they
+are reported, not dropped).  Events shorter than ``min_len`` frames are
+discarded.  ``peak_db`` is the maximum frame SPL inside the event (first
+frame wins ties) and ``peak_bin`` is that frame's argmax PSD bin.
+
+One scan body (:func:`scan_events`, pure jnp — comparisons, selects and
+integer adds only, no rounding anywhere) is shared verbatim by the
+Pallas kernel and the XLA fallback, so the two paths are bitwise-equal
+by construction; ``tests/test_events.py`` additionally pins both to a
+NumPy oracle under hypothesis.  The kernel runs the scan per batch block
+in VMEM (grid over records) so the event stream compacts on-device —
+only counts + capacity rows ever cross back to the host, not the
+``(batch, n_frames)`` SPL trace.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+N_EVENT_COLS = 4          # onset_frame, n_frames, peak_bin, peak_db
+
+
+def scan_events(spl: jnp.ndarray, peak_bin: jnp.ndarray, *,
+                n_frames: int, threshold_db: float, hysteresis_db: float,
+                min_len: int, capacity: int
+                ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """The shared scan body: (B, F) SPL/peak-bin -> (counts, rows).
+
+    ``spl`` may carry padding frames beyond ``n_frames`` as long as they
+    are ``-inf`` (strictly below any finite close level): a pad frame
+    then closes a still-open event with the exact same duration the
+    record-end closure below produces, and can never open one — the
+    padded and unpadded scans agree bitwise.
+    """
+    b, f_total = spl.shape
+    k = capacity
+    thr = jnp.float32(threshold_db)
+    lo = jnp.float32(threshold_db) - jnp.float32(hysteresis_db)
+    slots = jnp.arange(k, dtype=jnp.int32)[None, :]        # (1, K)
+
+    def emit(count, rows, qualify, start, dur, pk_bin, pk_db):
+        """Append one closing event per record where ``qualify``."""
+        row = jnp.stack([start.astype(jnp.float32),
+                         dur.astype(jnp.float32),
+                         pk_bin.astype(jnp.float32),
+                         pk_db], axis=-1)                  # (B, 4)
+        hot = qualify[:, None] & (slots == count[:, None])  # count < K only
+        rows = jnp.where(hot[:, :, None], row[:, None, :], rows)
+        return count + qualify.astype(jnp.int32), rows
+
+    def body(f, st):
+        in_ev, start, pk_db, pk_bin, count, rows = st
+        s = jax.lax.dynamic_slice_in_dim(spl, f, 1, axis=1)[:, 0]
+        pb = jax.lax.dynamic_slice_in_dim(peak_bin, f, 1, axis=1)[:, 0]
+        # close: first frame below the hysteresis level ends the event
+        closing = in_ev & (s < lo)
+        dur = f - start
+        count, rows = emit(count, rows, closing & (dur >= min_len),
+                           start, dur, pk_bin, pk_db)
+        in_ev = in_ev & ~closing
+        # continue: track the peak frame (strict >, first frame wins ties)
+        better = in_ev & (s > pk_db)
+        pk_db = jnp.where(better, s, pk_db)
+        pk_bin = jnp.where(better, pb, pk_bin)
+        # open: s < lo <= threshold on a closing frame, so no re-trigger
+        opening = ~in_ev & (s >= thr)
+        start = jnp.where(opening, f, start)
+        pk_db = jnp.where(opening, s, pk_db)
+        pk_bin = jnp.where(opening, pb, pk_bin)
+        return in_ev | opening, start, pk_db, pk_bin, count, rows
+
+    init = (jnp.zeros((b,), jnp.bool_),                    # in_event
+            jnp.zeros((b,), jnp.int32),                    # start frame
+            jnp.full((b,), -jnp.inf, jnp.float32),         # peak SPL
+            jnp.zeros((b,), jnp.int32),                    # peak bin
+            jnp.zeros((b,), jnp.int32),                    # count
+            jnp.zeros((b, k, N_EVENT_COLS), jnp.float32))  # rows
+    in_ev, start, pk_db, pk_bin, count, rows = jax.lax.fori_loop(
+        0, f_total, body, init)
+    # events still open at the TRUE record end close there
+    dur = jnp.int32(n_frames) - start
+    count, rows = emit(count, rows, in_ev & (dur >= min_len),
+                       start, dur, pk_bin, pk_db)
+    return count, rows
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "threshold_db", "hysteresis_db", "min_len", "capacity"))
+def detect_events_xla(spl: jnp.ndarray, peak_bin: jnp.ndarray, *,
+                      threshold_db: float, hysteresis_db: float,
+                      min_len: int, capacity: int):
+    """XLA fallback (reference form, kernels/ref.py discipline): the
+    scan body jitted directly, no padding, no grid."""
+    return scan_events(spl, peak_bin, n_frames=spl.shape[1],
+                       threshold_db=threshold_db,
+                       hysteresis_db=hysteresis_db,
+                       min_len=min_len, capacity=capacity)
+
+
+def _events_body(spl_ref, pbin_ref, cnt_ref, rows_ref, *, n_frames,
+                 threshold_db, hysteresis_db, min_len, capacity):
+    count, rows = scan_events(
+        spl_ref[...], pbin_ref[...], n_frames=n_frames,
+        threshold_db=threshold_db, hysteresis_db=hysteresis_db,
+        min_len=min_len, capacity=capacity)
+    cnt_ref[...] = count[:, None]
+    rows_ref[...] = rows
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "threshold_db", "hysteresis_db", "min_len", "capacity",
+    "block_records", "interpret"))
+def detect_events(spl: jnp.ndarray, peak_bin: jnp.ndarray, *,
+                  threshold_db: float, hysteresis_db: float,
+                  min_len: int = 1, capacity: int = 16,
+                  block_records: int = 8,
+                  interpret: bool | None = None):
+    """Pallas threshold+compaction: (B, F) f32 SPL + int32 peak bins ->
+    ``(counts (B,) int32, rows (B, capacity, 4) f32)``.
+
+    Grid over record blocks; each block scans its SPL trace in VMEM and
+    writes only the compacted encoding back.  Frame padding uses
+    ``-inf`` (see :func:`scan_events`), record padding scans garbage
+    rows that are sliced off before returning.
+    """
+    if interpret is None:
+        interpret = common.use_interpret()
+    assert spl.ndim == 2 and spl.shape == peak_bin.shape
+    n_rec, n_frames = spl.shape
+    block_records = min(block_records, max(n_rec, 1))
+    bpad = common.round_up(max(n_rec, 1), block_records)
+    # frames padded to the lane width with -inf: closes edge events at
+    # the true record end, never opens one
+    fpad = common.round_up(n_frames, 128)
+    spl = jnp.pad(spl.astype(jnp.float32),
+                  ((0, bpad - n_rec), (0, fpad - n_frames)),
+                  constant_values=-jnp.inf)
+    peak_bin = jnp.pad(peak_bin.astype(jnp.int32),
+                       ((0, bpad - n_rec), (0, fpad - n_frames)))
+
+    body = functools.partial(
+        _events_body, n_frames=n_frames, threshold_db=threshold_db,
+        hysteresis_db=hysteresis_db, min_len=min_len, capacity=capacity)
+    counts, rows = pl.pallas_call(
+        body,
+        grid=(bpad // block_records,),
+        in_specs=[
+            pl.BlockSpec((block_records, fpad), lambda i: (i, 0)),
+            pl.BlockSpec((block_records, fpad), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_records, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_records, capacity, N_EVENT_COLS),
+                         lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bpad, 1), jnp.int32),
+            jax.ShapeDtypeStruct((bpad, capacity, N_EVENT_COLS),
+                                 jnp.float32),
+        ],
+        interpret=interpret,
+    )(spl, peak_bin)
+    return counts[:n_rec, 0], rows[:n_rec]

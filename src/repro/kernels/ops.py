@@ -20,8 +20,8 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core import spectra
-from . import common, ct_rfft, framepsd, tol as tol_kernel, \
-    welch as welch_kernel
+from . import common, ct_rfft, events as events_kernel, framepsd, \
+    tol as tol_kernel, welch as welch_kernel
 
 
 def psd_backend(p) -> str:
@@ -78,3 +78,22 @@ def welch_psd(records: jnp.ndarray, p, backend: str | None = None,
 
 def tol_levels(psd: jnp.ndarray, band_matrix: jnp.ndarray, p) -> jnp.ndarray:
     return tol_kernel.tol_levels(psd, band_matrix, p)
+
+
+def detect_events(frame_spl: jnp.ndarray, frame_peak_bin: jnp.ndarray, p,
+                  kernel: bool = True):
+    """Threshold + compaction over per-frame wideband SPL (dB).
+
+    frame_spl / frame_peak_bin: (n_records, frames_per_record) float32 /
+    int32.  Event knobs come off ``p`` (DepamParams) so the compile
+    caches key on them.  Returns ``(counts (n,) int32,
+    rows (n, event_capacity, 4) float32)`` — see kernels/events.py for
+    the encoding.  ``kernel=False`` selects the XLA fallback; both paths
+    run the same scan body and are bitwise-identical.
+    """
+    fn = events_kernel.detect_events if kernel \
+        else events_kernel.detect_events_xla
+    return fn(frame_spl, frame_peak_bin,
+              threshold_db=p.event_threshold_db,
+              hysteresis_db=p.event_hysteresis_db,
+              min_len=p.event_min_len, capacity=p.event_capacity)

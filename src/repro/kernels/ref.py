@@ -37,3 +37,20 @@ def welch_mean(frame_psd_: jnp.ndarray) -> jnp.ndarray:
 
 def tol_levels(psd: jnp.ndarray, band_matrix: jnp.ndarray, p) -> jnp.ndarray:
     return spectra.tol_levels(psd, band_matrix, p)
+
+
+def detect_events(frame_spl: jnp.ndarray, frame_peak_bin: jnp.ndarray, p):
+    """Reference threshold+compaction: the shared scan body, un-padded.
+
+    The real oracle for detection is the NumPy re-implementation in
+    tests/test_events.py; this alias exists so callers can pin the
+    Pallas kernel against the fallback without reaching into
+    kernels.events.
+    """
+    from . import events
+
+    return events.detect_events_xla(
+        frame_spl, frame_peak_bin,
+        threshold_db=p.event_threshold_db,
+        hysteresis_db=p.event_hysteresis_db,
+        min_len=p.event_min_len, capacity=p.event_capacity)

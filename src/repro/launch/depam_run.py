@@ -9,7 +9,13 @@ Spark job in the paper:
       [--features welch,spl,tol,percentiles,ltsa,spd,minmax] \
       [--window N | --window per-file] [--wav-dir /path/to/wavs] \
       [--data-root /path/to/real/wavs] [--prefetch-depth 2] [--sync-io] \
-      [--payload int16] [--list-features]
+      [--payload int16] [--events [--event-threshold-db DB]] \
+      [--list-features]
+
+``--events`` turns on the on-device transient detector: a ragged
+``events`` log (onset, duration, peak bin, peak dB per detection) and
+per-event ``impulsive`` metrics (SEL, peak, kurtosis, rise time) land
+in the store next to the dense arrays, with their own resume cursor.
 
 ``--window`` sets the time resolution for the windowed soundscape
 products (``ltsa``/``spd``/``minmax``): an integer groups that many
@@ -149,6 +155,19 @@ def main() -> None:
                          "bytes, calibration as a sidecar, dequantize "
                          "inside the kernels) with bitwise-identical "
                          "results")
+    ap.add_argument("--events", action="store_true",
+                    help="detect transient events on-device (adds the "
+                         "ragged 'events' log and per-event 'impulsive' "
+                         "metrics to the feature set)")
+    ap.add_argument("--event-threshold-db", type=float, default=None,
+                    help="detection threshold on per-frame wideband SPL "
+                         "(dB re 1 uPa^2; default: params)")
+    ap.add_argument("--event-hysteresis-db", type=float, default=None,
+                    help="close events only below threshold minus this "
+                         "(Schmitt trigger; default: params)")
+    ap.add_argument("--event-capacity", type=int, default=None,
+                    help="max events kept per record (true counts are "
+                         "still reported on overflow; default: params)")
     ap.add_argument("--prefetch-depth", type=int, default=2,
                     help="plan steps of host read-ahead for the "
                          "pipelined executor (ignored with --sync-io)")
@@ -199,6 +218,14 @@ def main() -> None:
                      "(--wav-dir/--data-root); synthesized records "
                      "never cross the host→device link")
         j = j.payload(a.payload)
+    if a.events:
+        j = j.events(a.event_threshold_db,
+                     hysteresis_db=a.event_hysteresis_db,
+                     capacity=a.event_capacity, impulsive=True)
+    elif (a.event_threshold_db is not None
+          or a.event_hysteresis_db is not None
+          or a.event_capacity is not None):
+        ap.error("--event-* knobs need --events")
     if not a.sync_io:
         j = j.async_io(depth=a.prefetch_depth)
     mode = "sync" if a.sync_io else \
@@ -231,6 +258,17 @@ def main() -> None:
     for name, arr in sorted(out.windows.items()):
         summary += f"; {name} {arr.shape}"
     print(summary)
+    ev_json = {}
+    for name, log in sorted((out.events or {}).items()):
+        n_over = int(np.count_nonzero(log.overflow))
+        ev_json[name] = {"n_events": log.n_events,
+                         "rows_kept": int(log.kept.sum()),
+                         "overflowed_records": n_over,
+                         "capacity": log.capacity}
+        print(f"[depam] {name}: {log.n_events} events across "
+              f"{out.n_records} records ({int(log.kept.sum())} rows "
+              f"kept, capacity {log.capacity}"
+              + (f", {n_over} records overflowed)" if n_over else ")"))
     if done == 0:
         # already complete before this run: keep the recorded numbers
         print("[depam] job was already complete; summary.json untouched")
@@ -244,7 +282,8 @@ def main() -> None:
                    "executor": mode, "payload": a.payload,
                    "features": feats, "window": a.window or "epoch",
                    "windows": {k: list(v.shape)
-                               for k, v in sorted(out.windows.items())}},
+                               for k, v in sorted(out.windows.items())},
+                   "events": ev_json},
                   f, indent=1)
 
 

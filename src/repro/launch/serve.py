@@ -44,7 +44,9 @@ def _percentile_ms(seconds: list[float], q: float) -> float:
 
 
 def _bitwise(a, b) -> bool:
-    """Bitwise equality of two JobResults across all three namespaces."""
+    """Bitwise equality of two JobResults across all four namespaces
+    (dense features, epoch aggregates, windowed outputs, and the ragged
+    event logs — true counts AND kept rows)."""
     for da, db in ((a.features or {}, b.features or {}),
                    (a.epoch, b.epoch), (a.windows, b.windows)):
         if sorted(da) != sorted(db):
@@ -52,6 +54,14 @@ def _bitwise(a, b) -> bool:
         for k in da:
             if not (np.asarray(da[k]) == np.asarray(db[k])).all():
                 return False
+    ea, eb = a.events or {}, b.events or {}
+    if sorted(ea) != sorted(eb):
+        return False
+    for k in ea:
+        if not ((ea[k].counts == eb[k].counts).all()
+                and ea[k].rows.shape == eb[k].rows.shape
+                and (ea[k].rows == eb[k].rows).all()):
+            return False
     return True
 
 

@@ -192,7 +192,8 @@ class SoundscapeService:
                 stepper.close()
                 tenant._result = JobResult(
                     features=out[0], epoch=out[1], windows=out[2],
-                    window_edges=out[3], n_records=out[4], plan=out[5])
+                    window_edges=out[3], n_records=out[4],
+                    events=out[5], plan=out[6])
                 tenant.state = "done"
                 tenant._finished.set()
         except BaseException as e:             # noqa: BLE001

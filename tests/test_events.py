@@ -1,0 +1,445 @@
+"""Ragged event outputs + impulsive metrics, pinned to oracles.
+
+Three layers of contract:
+
+  * detection — the Pallas threshold+compaction kernel, the XLA
+    fallback, and a frame-by-frame NumPy re-implementation must agree
+    BITWISE (counts AND rows) over random SPL traces x thresholds x
+    batch/block shapes (hypothesis), plus the explicit edge cases:
+    zero events, all-frames-above, record-edge-touching events,
+    capacity overflow, min-len filtering and hysteresis dips;
+  * impulsive metrics — SEL / peak / kurtosis / rise time of every
+    detected event must match a float64 NumPy oracle over the raw
+    waveform within stated tolerances, for synthetic pile-driving
+    pulse trains, on both backends;
+  * durability — the append-only event log resumes bitwise across
+    {sync, async} x {fresh, resumed} x {float32, int16} jobs, and
+    rows appended after the last commit (a crash between write and
+    commit, including a torn partial row) vanish on resume instead of
+    duplicating or corrupting the log.
+
+The property-based class skips without hypothesis (an optional dev
+dependency); everything else always runs.
+"""
+import json
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # stubs so decorators at class-body time work
+    HAVE_HYPOTHESIS = False
+
+    def given(*a, **k):
+        return lambda f: f
+
+    def settings(*a, **k):
+        return lambda f: f
+
+    class _St:
+        """Chainable stub so strategy expressions (incl. .filter/.map)
+        evaluate at class-body time when hypothesis is absent."""
+
+        def __call__(self, *a, **k):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    st = _St()
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS,
+    reason="optional dev dependency: pip install hypothesis")
+
+import jax.numpy as jnp
+
+from repro import api
+from repro.core.manifest import DatasetManifest
+from repro.core.params import DepamParams
+from repro.core.store import FeatureStore
+from repro.data.wavio import write_dataset
+from repro.kernels import events as events_kernel
+
+P = DepamParams(nfft=256, window_size=256, window_overlap=128,
+                record_size_sec=0.25)
+M = DatasetManifest(n_files=3, records_per_file=4,
+                    record_size=P.record_size, fs=P.fs, seed=11)
+# knobs that make the 0.05-amplitude write_dataset noise (frame SPL
+# ~= -26 dB) fire plentifully, with overflow at capacity 4
+EV = dict(threshold_db=-25.5, hysteresis_db=0.5, capacity=4)
+
+
+# -- NumPy detection oracle ---------------------------------------------
+
+def detect_oracle(spl, pk_bin, *, threshold_db, hysteresis_db,
+                  min_len=1, capacity=16):
+    """Frame-by-frame re-implementation of the Schmitt trigger, in the
+    exact float32 arithmetic of the kernel (the close level is computed
+    as f32(threshold) - f32(hysteresis); peaks use strict >)."""
+    spl = np.asarray(spl, np.float32)
+    pk_bin = np.asarray(pk_bin, np.int32)
+    thr = np.float32(threshold_db)
+    lo = np.float32(threshold_db) - np.float32(hysteresis_db)
+    n_rec, n_frames = spl.shape
+    counts = np.zeros(n_rec, np.int32)
+    rows = np.zeros((n_rec, capacity, events_kernel.N_EVENT_COLS),
+                    np.float32)
+    for i in range(n_rec):
+        evs, in_ev = [], False
+        start = pk_db = pk = None
+        for f in range(n_frames):
+            s = spl[i, f]
+            if in_ev and s < lo:                 # close (dur excludes f)
+                if f - start >= min_len:
+                    evs.append((start, f - start, pk, pk_db))
+                in_ev = False
+            if in_ev and s > pk_db:              # first frame wins ties
+                pk_db, pk = s, pk_bin[i, f]
+            if not in_ev and s >= thr:           # open (no re-trigger:
+                in_ev = True                     # s < lo <= thr above)
+                start, pk_db, pk = f, s, pk_bin[i, f]
+        if in_ev and n_frames - start >= min_len:
+            evs.append((start, n_frames - start, pk, pk_db))
+        counts[i] = len(evs)
+        for j, (a, d, b, pdb) in enumerate(evs[:capacity]):
+            rows[i, j] = (np.float32(a), np.float32(d),
+                          np.float32(b), pdb)
+    return counts, rows
+
+
+def run_all(spl, pk_bin, **kw):
+    """Pallas kernel, XLA fallback and NumPy oracle on one input;
+    asserts the three agree bitwise and returns (counts, rows)."""
+    spl32 = np.asarray(spl, np.float32)
+    pb32 = np.asarray(pk_bin, np.int32)
+    block = kw.pop("block_records", None)
+    pargs = {} if block is None else {"block_records": block}
+    oc, orows = detect_oracle(spl32, pb32, **kw)
+    kc, krows = events_kernel.detect_events(
+        jnp.asarray(spl32), jnp.asarray(pb32), **kw, **pargs)
+    xc, xrows = events_kernel.detect_events_xla(
+        jnp.asarray(spl32), jnp.asarray(pb32), **kw)
+    for name, (c, r) in (("pallas", (kc, krows)), ("xla", (xc, xrows))):
+        assert np.array_equal(np.asarray(c), oc), (name, "counts")
+        assert np.array_equal(np.asarray(r), orows), (name, "rows")
+    return oc, orows
+
+
+class TestDetectionEdgeCases:
+    """Hand-checkable inputs: both backends vs the oracle, bitwise."""
+
+    def rand(self, b=3, f=40, seed=0):
+        rng = np.random.default_rng(seed)
+        return (rng.standard_normal((b, f)).astype(np.float32) * 10.0,
+                rng.integers(0, P.n_bins, (b, f)).astype(np.int32))
+
+    def test_zero_events(self):
+        spl, pb = self.rand()
+        c, r = run_all(spl, pb, threshold_db=1e4, hysteresis_db=3.0,
+                       capacity=4, min_len=1)
+        assert not c.any() and not r.any()
+
+    def test_all_frames_above(self):
+        spl, pb = self.rand()
+        spl = np.abs(spl) + 100.0       # every frame >= threshold
+        c, r = run_all(spl, pb, threshold_db=50.0, hysteresis_db=3.0,
+                       capacity=4, min_len=1)
+        assert (c == 1).all()           # one record-spanning event each
+        assert (r[:, 0, 0] == 0).all()            # onset frame 0
+        assert (r[:, 0, 1] == spl.shape[1]).all()  # closed at record end
+
+    def test_edge_touching_events(self):
+        # open at frame 0 (closed mid-record) and open at the LAST
+        # frame (duration-1 end closure) — both reported, not dropped
+        spl = np.full((1, 8), -50.0, np.float32)
+        spl[0, [0, 1, 7]] = (10.0, 11.0, 9.0)
+        pb = np.arange(8, dtype=np.int32)[None, :]
+        c, r = run_all(spl, pb, threshold_db=0.0, hysteresis_db=2.0,
+                       capacity=4, min_len=1)
+        assert c[0] == 2
+        assert r[0, 0].tolist() == [0.0, 2.0, 1.0, 11.0]
+        assert r[0, 1].tolist() == [7.0, 1.0, 7.0, 9.0]
+
+    def test_overflow_keeps_true_count_and_first_k(self):
+        # square wave: an event every other frame, capacity 2
+        spl = np.where(np.arange(20) % 2 == 0, 10.0, -50.0) \
+            .astype(np.float32)[None, :]
+        pb = np.zeros((1, 20), np.int32)
+        c, r = run_all(spl, pb, threshold_db=0.0, hysteresis_db=1.0,
+                       capacity=2, min_len=1)
+        assert c[0] == 10                        # TRUE count, not capped
+        assert r.shape[1] == 2                   # ...but only K rows
+        assert r[0, :, 0].tolist() == [0.0, 2.0]  # the FIRST two onsets
+
+    def test_min_len_drops_short_events(self):
+        spl = np.full((1, 12), -50.0, np.float32)
+        spl[0, 2] = 10.0                 # 1-frame blip: dropped
+        spl[0, 6:9] = 10.0               # 3-frame event: kept
+        pb = np.zeros((1, 12), np.int32)
+        c, r = run_all(spl, pb, threshold_db=0.0, hysteresis_db=1.0,
+                       capacity=4, min_len=2)
+        assert c[0] == 1
+        assert r[0, 0, :2].tolist() == [6.0, 3.0]
+
+    def test_hysteresis_holds_event_open_through_dips(self):
+        # dips below threshold but above threshold-hysteresis must NOT
+        # close the event; a dip below the hysteresis level must
+        spl = np.array([[5.0, -2.0, 6.0, -4.0, -50.0, -50.0]],
+                       np.float32)
+        pb = np.zeros((1, 6), np.int32)
+        c, r = run_all(spl, pb, threshold_db=0.0, hysteresis_db=3.0,
+                       capacity=4, min_len=1)
+        assert c[0] == 1
+        assert r[0, 0, :2].tolist() == [0.0, 3.0]   # survived the -2 dip
+        assert r[0, 0, 3] == np.float32(6.0)        # peak inside the dip
+
+    def test_single_frame_record(self):
+        spl = np.array([[3.0], [-3.0]], np.float32)
+        pb = np.zeros((2, 1), np.int32)
+        c, r = run_all(spl, pb, threshold_db=0.0, hysteresis_db=1.0,
+                       capacity=2, min_len=1)
+        assert c.tolist() == [1, 0]
+        assert r[0, 0, :2].tolist() == [0.0, 1.0]
+
+
+@needs_hypothesis
+class TestDetectionProperty:
+    """Pallas == XLA == NumPy oracle, bitwise, under random traces."""
+
+    @settings(max_examples=30, deadline=None)
+    @given(seed=st.integers(0, 2**32 - 1),
+           n_rec=st.integers(1, 5),
+           n_frames=st.integers(1, 48),
+           q=st.floats(0.05, 0.95),
+           hyst=st.floats(0.0, 5.0),
+           min_len=st.integers(1, 3),
+           capacity=st.integers(1, 6),
+           block=st.sampled_from([1, 2, 8]))
+    def test_matches_oracle_bitwise(self, seed, n_rec, n_frames, q,
+                                    hyst, min_len, capacity, block):
+        rng = np.random.default_rng(seed)
+        spl = rng.standard_normal((n_rec, n_frames)) \
+            .astype(np.float32) * 10.0
+        pb = rng.integers(0, 129, (n_rec, n_frames)).astype(np.int32)
+        # threshold at a quantile of the trace so events are plausible
+        thr = float(np.quantile(spl, q))
+        c, r = run_all(spl, pb, threshold_db=thr, hysteresis_db=hyst,
+                       min_len=min_len, capacity=capacity,
+                       block_records=block)
+        # structural invariants of the encoding
+        kept = np.minimum(c, capacity)
+        slot = np.arange(capacity)[None, :] < kept[:, None]
+        assert not r[~slot].any()                # unused slots are zero
+        for i in range(n_rec):
+            on = r[i, slot[i], 0]
+            assert (np.diff(on) > 0).all()       # onsets strictly ordered
+            assert (r[i, slot[i], 1] >= min_len).all()
+
+
+# -- impulsive metrics vs float64 oracle --------------------------------
+
+def make_pulses(m, p, seed=3):
+    """Synthetic pile-driving records: decaying sinusoid pings over a
+    quiet noise floor, 1-3 pings per record at staggered offsets."""
+    rng = np.random.default_rng(seed)
+    recs = rng.standard_normal((m.n_records, p.record_size)) \
+        .astype(np.float32) * 0.01
+    t = np.arange(2048)
+    ping = (np.exp(-t / 400.0) * np.sin(2 * np.pi * 0.05 * t) * 5.0) \
+        .astype(np.float32)
+    for i in range(m.n_records):
+        n_pulses = 1 + i % 3
+        for k in range(n_pulses):
+            pos = (p.record_size // (n_pulses + 1)) * (k + 1) \
+                + int(rng.integers(-200, 200))
+            end = min(pos + len(ping), p.record_size)
+            recs[i, pos:end] += ping[:end - pos]
+    return recs
+
+
+def impulsive_oracle(x, onset, dur, p):
+    """float64 SEL / peak / kurtosis / rise time over the event span
+    [onset*hop, (onset+dur-1)*hop + window_size) of waveform ``x``."""
+    x = np.asarray(x, np.float64)
+    s0 = onset * p.hop
+    s1 = min((onset + dur - 1) * p.hop + p.window_size, len(x))
+    seg = x[s0:s1]
+    e = seg * seg
+    sel = 10.0 * np.log10(max(e.sum() / p.fs, 1e-30)) + p.gain_db
+    peak = 10.0 * np.log10(max(e.max(), 1e-30)) + p.gain_db
+    mean = seg.mean()
+    m2 = ((seg - mean) ** 2).mean()
+    m4 = ((seg - mean) ** 4).mean()
+    kurt = m4 / max(m2 * m2, 1e-30)
+    rise = float(np.argmax(e)) / p.fs
+    return np.array([sel, peak, kurt, rise])
+
+
+class TestImpulsiveOracle:
+    @pytest.mark.parametrize("kernels", [True, False],
+                             ids=["pallas", "xla"])
+    def test_metrics_match_float64_oracle(self, kernels):
+        recs = make_pulses(M, P)
+
+        def reader(idx):
+            flat = idx.reshape(-1) % M.n_records
+            return recs[flat].reshape(*idx.shape, -1)
+
+        out = (api.job(M, P).features("spl").chunk(4).kernels(kernels)
+               .source(reader)
+               .events(-5.0, hysteresis_db=2.0, capacity=8,
+                       impulsive=True).run())
+        ev, imp = out.events["events"], out.events["impulsive"]
+        assert np.array_equal(ev.counts, imp.counts)
+        # every ping is its own event: the floor (-43 dB) never opens
+        # one and the inter-ping decay closes each before the next
+        want = 1 + np.arange(M.n_records) % 3
+        assert ev.counts.tolist() == want.tolist()
+
+        for i in range(M.n_records):
+            rows, vals = ev.record(i), imp.record(i)
+            assert len(rows) == len(vals)
+            for row, got in zip(rows, vals):
+                want = impulsive_oracle(recs[i], int(row[0]),
+                                        int(row[1]), P)
+                np.testing.assert_allclose(     # sel, peak (dB)
+                    got[:2], want[:2], rtol=0, atol=1e-3)
+                np.testing.assert_allclose(     # kurtosis
+                    got[2], want[2], rtol=1e-3, atol=1e-3)
+                np.testing.assert_allclose(     # rise time (s)
+                    got[3], want[3], rtol=0, atol=2.0 / P.fs)
+
+# -- end-to-end durability matrix ---------------------------------------
+
+@pytest.fixture(scope="module")
+def dataset(tmp_path_factory):
+    root = str(tmp_path_factory.mktemp("wavs"))
+    write_dataset(root, M)
+    return root
+
+
+def ev_job(root, payload=None, sync=True, kernels=True):
+    j = (api.job(M, P).features("spl").chunk(4).kernels(kernels)
+         .source(api.WavSource(root))
+         .events(EV["threshold_db"], hysteresis_db=EV["hysteresis_db"],
+                 capacity=EV["capacity"], impulsive=True))
+    if payload:
+        j = j.payload(payload)
+    if not sync:
+        j = j.async_io(depth=2)
+    return j
+
+
+def assert_logs_equal(a, b):
+    assert sorted(a) == sorted(b)
+    for k in a:
+        assert np.array_equal(a[k].counts, b[k].counts), k
+        assert a[k].rows.shape == b[k].rows.shape, k
+        assert np.array_equal(a[k].rows, b[k].rows), k
+
+
+class TestEventLogDurability:
+    @pytest.fixture(scope="class")
+    def reference(self, dataset):
+        """Uninterrupted sync float32 in-memory run — the anchor every
+        matrix cell must equal bitwise."""
+        return ev_job(dataset).run().events
+
+    def test_reference_has_events_and_overflow(self, reference):
+        ev = reference["events"]
+        assert ev.n_events > 0
+        assert ev.overflow.any()                 # capacity 4 is exceeded
+        assert ev.counts.max() > ev.capacity
+        assert len(ev.rows) == ev.kept.sum()
+
+    def test_int16_payload_bitwise(self, dataset, reference):
+        assert_logs_equal(ev_job(dataset, payload="int16").run().events,
+                          reference)
+
+    @pytest.mark.parametrize("payload", [None, "int16"],
+                             ids=["float32", "int16"])
+    @pytest.mark.parametrize("sync", [True, False],
+                             ids=["sync", "async"])
+    @pytest.mark.parametrize("resume", [False, True],
+                             ids=["fresh", "resumed"])
+    def test_store_matrix_bitwise(self, dataset, reference, tmp_path,
+                                  payload, sync, resume):
+        d = str(tmp_path / "store")
+        if resume:
+            ev_job(dataset, payload=payload, sync=sync).to(d) \
+                .limit(1).run()
+            cur = FeatureStore(d).load_cursor()   # the log's OWN cursor
+            assert sorted(cur["events"]) == ["events", "impulsive"]
+            assert all(v > 0 for v in cur["events"].values())
+        out = ev_job(dataset, payload=payload, sync=sync).to(d).run()
+        assert_logs_equal(out.events, reference)
+        # and the committed on-disk log re-reads identically
+        store = FeatureStore(d)
+        for name in ("events", "impulsive"):
+            counts, rows = store.load_events(name, 4)
+            assert np.array_equal(counts, out.events[name].counts)
+            assert np.array_equal(rows, out.events[name].rows)
+
+    @pytest.mark.parametrize("garbage", [16, 7],
+                             ids=["whole-row", "torn-row"])
+    def test_crash_between_write_and_commit(self, dataset, reference,
+                                            tmp_path, garbage):
+        """Rows appended after the last durable commit — whether whole
+        or torn mid-row — are truncated away on resume: the final log
+        is bitwise-identical to an uninterrupted run."""
+        d = str(tmp_path / "store")
+        ev_job(dataset).to(d).limit(1).run()
+        for name in ("events", "impulsive"):
+            with open(f"{d}/{name}.events.bin", "ab") as f:
+                f.write(b"\xff" * garbage)
+        out = ev_job(dataset).to(d).run()
+        assert_logs_equal(out.events, reference)
+        assert not np.isnan(out.events["events"].rows).any()
+
+    def test_commit_without_events_preserves_log_cursor(self, dataset,
+                                                        tmp_path):
+        """A dense-only job committing into a store must not orphan an
+        existing event log's row cursor."""
+        d = str(tmp_path / "store")
+        ev_job(dataset).to(d).limit(2).run()
+        before = FeatureStore(d).load_cursor()["events"]
+        assert all(v > 0 for v in before.values())
+        (api.job(M, P).features("spl").chunk(4)
+         .source(api.WavSource(dataset)).to(d).run())
+        cur = FeatureStore(d).load_cursor()
+        assert cur["cursor"] == M.n_records       # dense job finished...
+        assert cur["events"] == before            # ...log cursor intact
+
+    def test_cannot_resume_into_missing_log(self, dataset, tmp_path):
+        """A committed dense run has no event log to truncate-resume
+        into — opening one there must fail loudly, not silently restart
+        the log at row 0 under counts that still claim events."""
+        d = str(tmp_path / "store")
+        (api.job(M, P).features("spl").chunk(4)
+         .source(api.WavSource(dataset)).to(d).limit(1).run())
+        with pytest.raises(ValueError, match="cannot resume"):
+            ev_job(dataset).to(d).run()
+
+    def test_overflow_warns_once(self, dataset):
+        with pytest.warns(RuntimeWarning, match="capacity"):
+            ev_job(dataset).run()
+
+    def test_cli_summary_reports_events(self, dataset, tmp_path,
+                                        capsys, monkeypatch):
+        from repro.launch import depam_run
+
+        d = str(tmp_path / "out")
+        monkeypatch.setattr(
+            "sys.argv",
+            ["depam_run", "--files", "3", "--records-per-file", "4",
+             "--record-sec", "0.25", "--wav-dir", dataset, "--out", d,
+             "--events", "--event-threshold-db", "-25.5",
+             "--event-hysteresis-db", "0.5", "--event-capacity", "4"])
+        depam_run.main()
+        assert "events:" in capsys.readouterr().out
+        summary = json.load(open(f"{d}/summary.json"))
+        assert summary["events"]["events"]["n_events"] > 0
+        assert summary["events"]["impulsive"]["capacity"] == 4

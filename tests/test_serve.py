@@ -42,13 +42,29 @@ def wav_job(root, payload=None):
     return j if payload is None else j.payload(payload)
 
 
+def event_job(root):
+    """Ragged tenant: events + impulsive over the wav dataset, tuned so
+    the 0.05-amplitude noise floor (~-26 dB frame SPL) actually fires
+    and overflows the per-record capacity."""
+    return (wav_job(root)
+            .events(-25.5, hysteresis_db=0.5, capacity=4,
+                    impulsive=True))
+
+
 def assert_bitwise(a, b):
-    """Two JobResults agree bit for bit across all three namespaces."""
+    """Two JobResults agree bit for bit across all four namespaces
+    (dense features, epoch, windows, and ragged event logs)."""
     for da, db in ((a.features or {}, b.features or {}),
                    (a.epoch, b.epoch), (a.windows, b.windows)):
         assert sorted(da) == sorted(db)
         for k in da:
             assert np.array_equal(np.asarray(da[k]), np.asarray(db[k])), k
+    ea, eb = a.events or {}, b.events or {}
+    assert sorted(ea) == sorted(eb)
+    for k in ea:
+        assert np.array_equal(ea[k].counts, eb[k].counts), k
+        assert ea[k].rows.shape == eb[k].rows.shape, k
+        assert np.array_equal(ea[k].rows, eb[k].rows), k
 
 
 class TestSchedulers:
@@ -130,6 +146,39 @@ class TestServiceBitwise:
         svc2.run(timeout=600)
         assert_bitwise(ha.result(), synth_job().run())
         assert_bitwise(hb.result(), wav_job(dataset).run())
+
+    def test_event_tenant_matches_sequential(self, dataset):
+        """A ragged events+impulsive tenant next to dense tenants: the
+        interleaved event logs (true counts AND kept rows) are
+        bitwise-identical to its solo run."""
+        svc = SoundscapeService(quantum=2)
+        he = event_job(dataset).submit(svc, name="ev")
+        hd = synth_job().submit(svc, name="dense")
+        svc.run(timeout=600)
+        res = he.result()
+        assert res.events["events"].n_events > 0
+        assert res.events["events"].overflow.any()
+        assert_bitwise(res, event_job(dataset).run())
+        assert_bitwise(hd.result(), synth_job().run())
+
+    def test_resumed_event_tenant_matches_sequential(self, dataset,
+                                                     tmp_path):
+        """Crash a store-backed events tenant mid-job, resume it
+        concurrently with a dense tenant: the event log's row cursor
+        picks up exactly where the commit left it — no duplicated or
+        dropped rows — and the final log is bitwise-equal to an
+        uninterrupted solo run."""
+        d = str(tmp_path / "ev")
+        svc = SoundscapeService()
+        event_job(dataset).to(d).limit(1).submit(svc, name="ev")
+        svc.run(timeout=600)
+
+        svc2 = SoundscapeService()
+        he = event_job(dataset).to(d).submit(svc2, name="ev")
+        hd = synth_job().submit(svc2, name="dense")
+        svc2.run(timeout=600)
+        assert_bitwise(he.result(), event_job(dataset).run())
+        assert_bitwise(hd.result(), synth_job().run())
 
     def test_fairness_bound(self):
         """Equal always-runnable tenants: at every prefix of the turn
