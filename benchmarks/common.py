@@ -19,4 +19,13 @@ def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:
 
 
 def row(name: str, us_per_call: float, derived: str = "") -> str:
+    """One benchmark CSV row.  Every row must carry a real measurement:
+    a non-positive timing means somebody emitted an analytic placeholder
+    (the old fig3_2 wrote ``us_per_call=0.0`` rows), and those silently
+    poison downstream speedup math — refuse them at the source."""
+    if not us_per_call > 0.0:
+        raise ValueError(
+            f"benchmark row {name!r} has non-positive us_per_call="
+            f"{us_per_call!r}; rows must carry measured wall time "
+            f"(derive analytic quantities into the `derived` field)")
     return f"{name},{us_per_call:.1f},{derived}"

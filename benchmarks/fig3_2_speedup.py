@@ -1,57 +1,170 @@
-"""Paper Fig 3.2/3.3: speed-up vs number of workers, both parameter sets.
+"""Paper Fig 3.2/3.3: measured speed-up vs number of workers.
 
-The paper measures wall-clock speed-up of the Hadoop/Spark cluster from 1
-to 16 nodes and finds near-linear scaling above ~200 GB because the
-workflow has no shuffle.  This container has ONE physical core, so wall
-time cannot show parallel speedup; what we CAN verify mechanically is the
-property the paper attributes the scaling to: perfect work balance with
-zero cross-shard traffic.  This benchmark:
+The paper measures wall-clock speed-up of the Hadoop/Spark cluster from
+1 to 16 nodes and finds near-linear scaling above ~200 GB because the
+workflow has no shuffle.  Earlier revisions of this benchmark only
+REASONED about that (analytic balance ratios, ``us_per_call=0.0``
+placeholder rows); this one EXECUTES the sharded job and measures it.
 
-  * builds the sharded plan at n_shards in {1,2,4,8,16} for several
-    workloads and reports the load-balance ratio (max/mean records per
-    shard — 1.0 is ideal) and the number of pipeline collectives (always
-    exactly ONE epoch-level psum = the paper's single timestamp join);
-  * derives speedup_bound = n_shards / balance_ratio — the Amdahl bound
-    implied by the plan (what a real cluster realizes, per the paper);
-  * measures single-shard device throughput to anchor absolute GB/min.
+A child process is launched with
+``--xla_force_host_platform_device_count=8`` so jax exposes 8 devices
+over the host CPU; the child writes one wav dataset per parameter set,
+fixes the logical partition at L=8 worker slices, then runs the SAME
+job on a ``make_host_mesh(data=D)`` submesh for D in {1, 2, 4, 8},
+timing full end-to-end runs (wav read -> sharded device step -> epoch
+merge).  Every row carries measured wall time; speedup and parallel
+efficiency land in the derived field next to the plan's balance ratio
+(the Amdahl bound the paper attributes its scaling to).  The child also
+asserts the D>1 results are bitwise-identical to D=1 — the sharded
+layer's core guarantee — so a timing row is only ever emitted for a
+verified-correct run.
+
+Honesty note: the host devices share this container's CPU core(s), so
+measured speedup here is ~1 (the point is real non-zero wall-clock and
+the verified scaling MECHANISM); on real multi-core/multi-chip hosts
+the same harness produces the paper-style curve.
+
+``--smoke`` runs a seconds-scale configuration and asserts the
+invariants (non-zero timings, bitwise-equal shard results) for CI.
 """
 from __future__ import annotations
 
-import numpy as np
+import os
+import subprocess
+import sys
 
-from benchmarks import common
-from repro.core import pipeline
-from repro.core.manifest import DatasetManifest, plan
-from repro.core.params import PARAM_SET_1, PARAM_SET_2, DepamParams
+N_DEVICES = 8
+SHARD_COUNTS = (1, 2, 4, 8)
 
 
-def run(shards=(1, 2, 4, 8, 16), workloads=(33, 134, 300), iters=2):
-    rows = []
+# ---------------------------------------------------------------------------
+# child: runs under --xla_force_host_platform_device_count, does the work
+# ---------------------------------------------------------------------------
+
+def _child(fast: bool) -> None:
+    import dataclasses
+    import tempfile
+
+    import numpy as np
+
+    from benchmarks import common
+    from repro import api
+    from repro.core.manifest import DatasetManifest
+    from repro.core.params import PARAM_SET_1, PARAM_SET_2
+    from repro.data import wavio
+    from repro.distributed.partition import build_partition
+    from repro.launch.mesh import make_host_mesh
+
+    n_files = 8 if fast else 16
+    rpf = 2 if fast else 8
+    chunk = 1 if fast else 2
+    rec_sec = 0.5 if fast else 2.0
+    iters = 1 if fast else 3
+
     for pset_id, base in ((1, PARAM_SET_1), (2, PARAM_SET_2)):
-        p = DepamParams(nfft=base.nfft, window_size=base.window_size,
-                        window_overlap=base.window_overlap,
-                        record_size_sec=2.0)
-        for gb_nominal in workloads:
-            # scale the paper workload (GB) down 1000x to records
-            n_records = max(int(gb_nominal * 1e6 / (p.record_size * 4)), 8)
-            m = DatasetManifest(n_files=1, records_per_file=n_records,
-                                record_size=p.record_size, fs=p.fs)
-            for n in shards:
-                pl_ = plan(m, n, chunk_records=4)
-                per_shard = [0] * n
-                for s in range(pl_.n_steps):
-                    mask = pl_.step_mask(s)
-                    for sh in range(n):
-                        per_shard[sh] += int(mask[sh].sum())
-                balance = max(per_shard) / (sum(per_shard) / n)
-                speedup_bound = n / balance
-                rows.append(common.row(
-                    f"fig3_2/pset{pset_id}/gb={gb_nominal}/shards={n}",
-                    0.0,
-                    f"speedup_bound={speedup_bound:.2f};balance={balance:.3f};"
+        p = dataclasses.replace(base, record_size_sec=rec_sec)
+        m = DatasetManifest(n_files=n_files, records_per_file=rpf,
+                            record_size=p.record_size, fs=p.fs,
+                            seed=pset_id)
+        with tempfile.TemporaryDirectory() as root:
+            wavio.write_dataset(root, m)
+            part = build_partition(m, N_DEVICES, chunk)
+            gb = m.total_gb
+
+            def make_job(d):
+                return (api.job(m, p)
+                        .features("welch", "spl", "ltsa", "spd")
+                        .window(records=max(rpf, 2))
+                        .chunk(chunk).shards(N_DEVICES)
+                        # timing wants the fast XLA path, not the
+                        # Pallas interpreter (a CPU debug mode)
+                        .kernels(False)
+                        .source(api.WavSource(root))
+                        .on(make_host_mesh(data=d)))
+
+            ref = None
+            base_s = None
+            for d in SHARD_COUNTS:
+                make_job(d).run()                      # warmup + compile
+                secs = common.timeit(
+                    lambda: make_job(d).run(), warmup=0, iters=iters)
+                res = make_job(d).run()
+                if ref is None:
+                    ref, base_s = res, secs
+                else:
+                    for k in ref.features:
+                        assert np.array_equal(ref.features[k],
+                                              res.features[k]), \
+                            (pset_id, d, k)
+                    for k in ref.windows:
+                        assert np.array_equal(ref.windows[k],
+                                              res.windows[k]), \
+                            (pset_id, d, k)
+                assert secs > 0.0
+                speedup = base_s / secs
+                print(common.row(
+                    f"fig3_2/pset{pset_id}/shards={d}",
+                    secs * 1e6,
+                    f"records_s={m.n_records / secs:.1f};"
+                    f"gb={gb:.4f};speedup={speedup:.2f};"
+                    f"efficiency={speedup / d:.2f};"
+                    f"balance={part.balance_ratio:.3f};"
                     f"collectives_per_epoch=1"))
+    print("FIG32-DONE")
+
+
+# ---------------------------------------------------------------------------
+# parent: spawn the child with forced host devices, collect its rows
+# ---------------------------------------------------------------------------
+
+def run(fast: bool = False, iters: int = 2) -> list[str]:
+    """Execute the sharded scaling sweep in a subprocess; return rows.
+
+    A subprocess because jax in THIS process may already be initialized
+    with a single device — ``xla_force_host_platform_device_count``
+    only takes effect before first jax use.
+    """
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        f" --xla_force_host_platform_device_count"
+                        f"={N_DEVICES}")
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(repo, "src"), repo,
+         env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    cmd = [sys.executable, "-m", "benchmarks.fig3_2_speedup",
+           "--child"] + (["--fast"] if fast else [])
+    out = subprocess.run(cmd, env=env, cwd=repo, capture_output=True,
+                         text=True, timeout=3600)
+    if out.returncode != 0 or "FIG32-DONE" not in out.stdout:
+        raise RuntimeError(
+            f"fig3_2 child failed (rc={out.returncode}):\n"
+            f"{out.stdout[-2000:]}\n{out.stderr[-2000:]}")
+    rows = [ln for ln in out.stdout.splitlines()
+            if ln.startswith("fig3_2/")]
+    expected = 2 * len(SHARD_COUNTS)
+    if len(rows) != expected:
+        raise RuntimeError(
+            f"fig3_2 child produced {len(rows)} rows, wanted {expected}")
     return rows
 
 
+def main() -> None:
+    if "--child" in sys.argv:
+        _child(fast="--fast" in sys.argv)
+        return
+    fast = "--smoke" in sys.argv or "--fast" in sys.argv
+    rows = run(fast=fast)
+    for r in rows:
+        print(r)
+    if "--smoke" in sys.argv:
+        # CI contract: every row measured (row() already refuses
+        # non-positive timings; re-assert after the subprocess hop)
+        for r in rows:
+            assert float(r.split(",")[1]) > 0.0, r
+        print(f"SMOKE-OK {len(rows)} measured rows")
+
+
 if __name__ == "__main__":
-    print("\n".join(run()))
+    main()

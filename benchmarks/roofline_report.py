@@ -57,6 +57,10 @@ def run():
         if c["status"] != "ok":
             continue
         bound = c.get("roofline_bound_s", 0.0)
+        if not bound > 0.0:
+            # a dry-run cell with no modeled time has nothing to report
+            # (and common.row refuses placeholder timings by contract)
+            continue
         rows.append(common.row(
             f"roofline/{c['arch']}/{c['shape']}/{c['mesh']}",
             bound * 1e6,

@@ -1,12 +1,12 @@
 """Benchmark aggregator — one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV and writes the consolidated
-perf-trajectory snapshot ``BENCH_PR7.json`` at the repo root: one entry
+perf-trajectory snapshot ``BENCH_PR8.json`` at the repo root: one entry
 per benchmark with µs/call plus every derived metric (records/s,
 host→device bytes/record, events/s, file opens/step, step-latency
 percentiles, compile-cache hits, speedups...), so future PRs can diff
 against a recorded baseline instead of re-deriving one
-(``BENCH_PR6.json`` remains as the previous PR's recorded numbers).
+(``BENCH_PR7.json`` remains as the previous PR's recorded numbers).
 Snapshots are keyed by config (``fast`` vs ``full``) and merged into
 the existing file, so a ``--fast`` dev run never clobbers full-config
 baseline numbers with non-comparable ones.
@@ -32,6 +32,10 @@ def parse_rows(rows: list[str]) -> dict:
         name, us, derived = row.split(",", 2)
         if name == "name":
             continue
+        if not float(us) > 0.0:
+            # defense in depth: common.row() already refuses these, but
+            # a snapshot must never record an unmeasured placeholder
+            continue
         entry: dict = {"us_per_call": float(us)}
         for pair in filter(None, derived.split(";")):
             k, _, v = pair.partition("=")
@@ -54,7 +58,10 @@ def main() -> None:
 
     rows += fig3_1_single_node.run(
         workload_records=(4, 8) if fast else (4, 8, 16))
-    rows += fig3_2_speedup.run()
+    # subprocess-based (needs 8 forced host devices, which must be set
+    # before jax initializes — impossible in this already-running
+    # process); measured sharded execution at 1/2/4/8 data shards
+    rows += fig3_2_speedup.run(fast=fast)
     rows += table2_1_param_sets.run(n_records=2 if fast else 4)
     rows += job_pipeline.run(n_records=8 if fast else 16,
                              iters=2 if fast else 3)
@@ -86,7 +93,7 @@ def main() -> None:
     print("\n".join(rows))
 
     out_path = os.path.abspath(os.path.join(
-        os.path.dirname(__file__), os.pardir, "BENCH_PR7.json"))
+        os.path.dirname(__file__), os.pardir, "BENCH_PR8.json"))
     snapshot: dict = {}
     if os.path.exists(out_path):
         try:

@@ -59,6 +59,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.manifest import DatasetManifest, ShardPlan
 from repro.core.params import DepamParams
+from repro.distributed import partition as partition_lib
 from .features import (EPOCH_WINDOW, FeatureContext, FeatureSpec,
                        Reduction, StateField, Window)
 from .sinks import Sink
@@ -239,6 +240,36 @@ def resolve_bindings(specs, m: DatasetManifest, p: DepamParams,
     return tuple(bindings), windows
 
 
+def _merged_segments(seg_op, contribs, wids, n_windows: int,
+                     n_shards: int, combine):
+    """Per-logical-shard window partials merged in fixed shard order.
+
+    This is where the cross-device collective happens — and why sharded
+    runs are bitwise-identical across device counts.  Each logical
+    shard's contributions are segment-reduced *locally* (a vmap over
+    the sharded leading axis, so every device reduces only its own
+    rows), then the ``n_shards`` partials are combined in ascending
+    shard order by an unrolled chain of ``combine`` ops.  Because the
+    partial count and the merge order are fixed by the *plan* (not the
+    mesh), laying the same plan over 1, 2, 4 or 8 devices changes only
+    where the all-gather of the partials happens — pure data movement —
+    never the order of a single floating-point add.
+
+    ``n_shards == 1`` short-circuits to the plain global segment reduce
+    (arithmetically the same chain), keeping single-shard jobs on the
+    exact instruction sequence previous releases produced.
+    """
+    if n_shards == 1:
+        return seg_op(contribs, wids.reshape(-1), num_segments=n_windows)
+    c = contribs.reshape((n_shards, -1) + contribs.shape[1:])
+    per = jax.vmap(
+        lambda cc, ww: seg_op(cc, ww, num_segments=n_windows))(c, wids)
+    part = per[0]
+    for s in range(1, n_shards):
+        part = combine(part, per[s])
+    return part
+
+
 @functools.lru_cache(maxsize=64)
 def compile_reduce_update(bindings: tuple[ReductionBinding, ...],
                           mesh: Mesh | None, data_axes: tuple[str, ...],
@@ -253,28 +284,31 @@ def compile_reduce_update(bindings: tuple[ReductionBinding, ...],
     ``wids`` maps each distinct window key to the step's
     ``(n_shards, chunk)`` window ids (host-computed from the plan, so
     the program never retraces).  Each reduction's per-record
-    contributions are segment-reduced into their window slots and merged
-    into the carry with the field's declared associative op; under a
-    mesh the replicated out_sharding makes XLA insert the collective.
+    contributions are segment-reduced per logical shard and merged into
+    the carry in fixed shard order (see :func:`_merged_segments`);
+    under a mesh the replicated out_sharding makes XLA insert the
+    partial all-gather — the job's ONE collective per step, and the
+    reason an N-device run is bitwise-identical to the 1-device run.
     ``donate`` recycles the old state's buffers — only safe when no
     per-step reference to the carry is kept (no sink consumes commit
     state).
     """
 
     def update(state, out, mask, wids):
+        n_shards = mask.shape[0]
         fmask = mask.reshape(-1)
         new = {}
         for b in bindings:
             val = out[b.feature]
             val = val.reshape((-1,) + val.shape[2:])
-            w = wids[b.wkey].reshape(-1)
+            w = wids[b.wkey]
             contribs = b.red.update(val, fmask)
             for f in b.fields:
                 key = _sk(b, f.name)
                 c = contribs[f.name]
                 if f.merge in ("sum", "ksum"):
-                    part = jax.ops.segment_sum(
-                        c, w, num_segments=b.n_windows)
+                    part = _merged_segments(jax.ops.segment_sum, c, w,
+                                            b.n_windows, n_shards, jnp.add)
                     if f.merge == "ksum":
                         y = part - state[key + ":c"]
                         t = state[key] + y
@@ -291,11 +325,13 @@ def compile_reduce_update(bindings: tuple[ReductionBinding, ...],
                     else:
                         new[key] = state[key] + part
                 elif f.merge == "min":
-                    new[key] = jnp.minimum(state[key], jax.ops.segment_min(
-                        c, w, num_segments=b.n_windows))
+                    new[key] = jnp.minimum(state[key], _merged_segments(
+                        jax.ops.segment_min, c, w, b.n_windows, n_shards,
+                        jnp.minimum))
                 else:
-                    new[key] = jnp.maximum(state[key], jax.ops.segment_max(
-                        c, w, num_segments=b.n_windows))
+                    new[key] = jnp.maximum(state[key], _merged_segments(
+                        jax.ops.segment_max, c, w, b.n_windows, n_shards,
+                        jnp.maximum))
         new["__live__"] = state["__live__"] \
             + jnp.sum(mask.astype(jnp.int32))
         return new
@@ -461,8 +497,33 @@ class JobStepper:
 
     # -- lifecycle ------------------------------------------------------
     def start(self) -> "JobStepper":
-        """Bind, compile, open the sink, restore committed state."""
+        """Bind, compile, open the sink, restore committed state.
+
+        Resumable sinks may carry a committed plan whose geometry
+        differs from this job's (the job was checkpointed under a
+        different device count): the committed partition wins — the
+        same logical ``(n_shards, chunk)`` program replays over however
+        many devices the current mesh provides, which is what makes a
+        resume across a changed device count bitwise-identical."""
+        committed = self.sink.committed_plan()
+        if committed is not None:
+            self.pl = partition_lib.adopt_plan(self.pl, committed)
         m, p, pl_ = self.m, self.p, self.pl
+        self._sharding = None
+        if self.mesh is not None:
+            n_dev = partition_lib.data_parallel_size(self.mesh,
+                                                     self.data_axes)
+            if n_dev > pl_.n_shards or pl_.n_shards % n_dev:
+                raise ValueError(
+                    f"plan has {pl_.n_shards} logical shard(s), which "
+                    f"cannot be laid out over {n_dev} data-parallel "
+                    f"device(s) (mesh {dict(self.mesh.shape)}, data axes "
+                    f"{self.data_axes}) — the device count must divide "
+                    f"the shard count; pick .shards(L) with L % devices "
+                    f"== 0, or build a smaller mesh with "
+                    f"make_host_mesh(data=...)")
+            self._sharding = partition_lib.shard_sharding(self.mesh,
+                                                          self.data_axes)
         self.source = source = self.source.bind(m, p)
         self._shapes = {s.name: tuple(s.shape(m, p)) for s in self.specs
                         if s.shape is not None}
@@ -533,13 +594,22 @@ class JobStepper:
         """Records covered by already-dispatched steps."""
         if not self._started or self._step == 0:
             return 0
-        return self.pl.cursor_after(self._step - 1) - self.pl.start
+        return self.pl.committed_records(self._step - 1)
 
     @property
     def done(self) -> bool:
         return self._started and (self._result is not None
                                   or self._exhausted
                                   or self._step >= self._n_steps)
+
+    def _ship(self, x: np.ndarray):
+        """Host payload -> device(s).  Under a mesh, each device gets
+        only its shard's rows (device-local placement, the donated
+        buffer already laid out for the step's in_sharding); without
+        one, a plain transfer."""
+        if self._sharding is None:
+            return jnp.asarray(x)
+        return partition_lib.ship(x, self._sharding)
 
     def _live_mask(self, idx: np.ndarray) -> np.ndarray | None:
         """The step's live mask, additionally excluding records a
@@ -586,24 +656,25 @@ class JobStepper:
         wids = {k: jnp.asarray(w.ids(idx, self.m))
                 for k, w in self._wins.items()}
         if source.device_synth:
-            out = self._step_fn(jnp.asarray(idx, jnp.int32), dmask)
+            out = self._step_fn(self._ship(np.asarray(idx, np.int32)),
+                                dmask)
         elif self._raw:
             # raw-PCM transport: ship the int16 bytes as-is (half the
             # bus traffic, still donated) + the tiny per-record
             # decode-scale sidecar; kernels dequantize in VMEM
-            payload = jnp.asarray(next(self._stream))
-            if payload.dtype != jnp.int16:
+            payload = np.asarray(next(self._stream))
+            if payload.dtype != np.int16:
                 raise TypeError(
                     f"int16 payload path got {payload.dtype} from "
                     f"{type(source).__name__}.stream — the source's "
                     f"payload_dtype promises raw '<i2' PCM")
-            out = self._step_fn(payload,
+            out = self._step_fn(self._ship(payload),
                                 jnp.asarray(source.scales(idx),
                                             jnp.float32),
                                 dmask)
         else:
-            payload = jnp.asarray(next(self._stream), jnp.float32)
-            out = self._step_fn(payload, dmask)
+            payload = np.asarray(next(self._stream), np.float32)
+            out = self._step_fn(self._ship(payload), dmask)
         self._agg_state = self._agg_fn(self._agg_state, out, dmask, wids)
         # start the device→host transfers now; block in _drain_one —
         # reduction-only values never cross back to the host

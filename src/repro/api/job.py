@@ -30,6 +30,7 @@ from jax.sharding import Mesh
 
 from repro.core.manifest import DatasetManifest, ShardPlan, plan
 from repro.core.params import DepamParams
+from repro.distributed.partition import build_partition
 from . import engine
 from .features import EPOCH_WINDOW, FeatureSpec, Window, resolve_features
 from .sinks import AsyncSink, Sink, as_sink
@@ -101,6 +102,7 @@ class SoundscapeJob:
         self._max_steps: int | None = None
         self._payload_dtype: str | None = None
         self._window: Window = EPOCH_WINDOW
+        self._shards: int | None = None
         self._exec = engine.ExecOptions()
 
     def features(self, *feats: str | FeatureSpec) -> "SoundscapeJob":
@@ -127,6 +129,25 @@ class SoundscapeJob:
         """Where results go: Sink, FeatureStore, store path, or a
         streaming callback ``fn(step, indices, values)``."""
         self._sink = sink
+        return self
+
+    def shards(self, n: int | None) -> "SoundscapeJob":
+        """Fix the job's LOGICAL partition count independently of the
+        mesh.
+
+        The dataset is split into ``n`` contiguous worker slices (cut on
+        file boundaries where the files allow — see
+        :func:`repro.distributed.build_partition`); the mesh's data axis
+        then maps those slices onto devices, ``n / n_devices`` per
+        device.  Because the partition — and with it every array shape
+        and reduction order — is a function of ``n`` alone, a job run
+        (or resumed) on any device count that divides ``n`` produces
+        bitwise-identical results.  Default (None): one slice per data-
+        parallel device, or a single slice without a mesh.
+        """
+        if n is not None and int(n) < 1:
+            raise ValueError(f"shards must be >= 1, got {n}")
+        self._shards = None if n is None else int(n)
         return self
 
     def chunk(self, records: int) -> "SoundscapeJob":
@@ -235,12 +256,31 @@ class SoundscapeJob:
         self._exec = engine.ExecOptions()
         return self
 
-    def _plan(self) -> ShardPlan:
-        n_shards = 1
+    def _plan(self):
+        """The job's step plan.
+
+        A single-slice job with no explicit ``.shards(...)`` keeps the
+        legacy interleaved :class:`ShardPlan` (existing stores resume
+        against its cursor layout unchanged); any data-parallel or
+        explicitly partitioned job gets a file-boundary-aware
+        :class:`~repro.distributed.partition.PartitionPlan` whose slice
+        count L is fixed by ``.shards(L)`` (default: the mesh's data
+        size), so the same plan — and bitwise the same results — holds
+        at every device count dividing L.
+        """
+        n_dev = 1
         if self._mesh is not None:
-            n_shards = int(np.prod([self._mesh.shape[a]
-                                    for a in self._data_axes]))
-        return plan(self._m, n_shards, self._chunk)
+            n_dev = int(np.prod([self._mesh.shape[a]
+                                 for a in self._data_axes]))
+        n_shards = self._shards if self._shards is not None else n_dev
+        if n_dev > 1 and n_shards % n_dev:
+            raise ValueError(
+                f".shards({n_shards}) is not divisible by the mesh's "
+                f"{n_dev} data-parallel devices — every device must own "
+                f"the same number of worker slices")
+        if n_shards == 1 and self._shards is None:
+            return plan(self._m, 1, self._chunk)
+        return build_partition(self._m, n_shards, self._chunk)
 
     def resume_step(self) -> int:
         """The plan step a run() would resume at (0 = from scratch) —

@@ -104,6 +104,37 @@ class EventLog:
         return self.rows[:, self.columns.index(name)]
 
 
+def reorder_event_rows(counts: np.ndarray, rows: np.ndarray,
+                       capacity: int, order: np.ndarray) -> np.ndarray:
+    """Permute an append-ordered event log into record order.
+
+    A partitioned plan's shards advance in parallel, so the append-only
+    log interleaves the spans (step-major); ``order`` is the plan's
+    :meth:`record_order` — the global record ids in append order.  The
+    permutation is pure bookkeeping: ``counts`` are per-record already,
+    and each record's kept rows are contiguous within its append slot.
+    Identity orders (every single-shard plan) return ``rows`` as-is, as
+    does a partially-committed log whose appended total does not match
+    the counts (only a completed log has a well-defined global order).
+    """
+    order = np.asarray(order, np.int64)
+    if order.size == 0 or bool(np.all(np.diff(order) > 0)):
+        return rows
+    kept = np.minimum(np.asarray(counts), capacity).astype(np.int64)
+    kept_append = kept[order]
+    total = int(kept_append.sum())
+    if total != len(rows):
+        return rows
+    src_start = np.concatenate([[0], np.cumsum(kept_append)[:-1]])
+    dst_all = np.concatenate([[0], np.cumsum(kept)[:-1]])
+    dst_start = dst_all[order]
+    dst_idx = np.repeat(dst_start, kept_append) \
+        + (np.arange(total) - np.repeat(src_start, kept_append))
+    out = np.empty_like(rows)
+    out[dst_idx] = rows
+    return out
+
+
 class Sink:
     resumable: bool = False
     # Whether commit() needs the accumulated epoch-aggregate state.  The
@@ -124,6 +155,14 @@ class Sink:
         """Steps of ``plan`` already durably committed (0 unless
         resumable)."""
         return 0
+
+    def committed_plan(self) -> dict | None:
+        """The plan geometry the committed cursor was written under
+        (``{"start", "stop", "n_shards", "chunk_records"[, "offsets"]}``),
+        or None when nothing is committed.  The engine adopts it on
+        resume, so a job checkpointed at N devices re-partitions onto M
+        devices bitwise-identically."""
+        return None
 
     def write(self, step: int, indices: np.ndarray,
               values: dict[str, np.ndarray]) -> None:
@@ -202,23 +241,32 @@ class MemorySink(Sink):
                        for name, shape in shapes.items()}
 
     def open_events(self, layouts):
+        # rows are keyed BY RECORD, not appended: a partitioned plan's
+        # shards advance in parallel, so steps deliver record ids out
+        # of global order — keyed assembly makes the materialized log
+        # identical for every shard layout
         self._events = {
             name: {"columns": cols, "capacity": cap,
                    "counts": np.zeros(self._n_records, np.int32),
-                   "rows": []}
+                   "rows": {}}
             for name, (cols, cap) in layouts.items()}
 
     def write_events(self, step, indices, values):
         for name, (counts, rows) in values.items():
             ev = self._events[name]
             ev["counts"][indices] = counts
-            ev["rows"].append(np.asarray(rows, np.float32))
+            kept = np.minimum(counts, ev["capacity"])
+            offs = np.concatenate([[0], np.cumsum(kept)])
+            rows = np.asarray(rows, np.float32)
+            for i, rec in enumerate(np.asarray(indices)):
+                ev["rows"][int(rec)] = rows[offs[i]:offs[i + 1]]
 
     def event_result(self):
         out = {}
         for name, ev in self._events.items():
             n_cols = len(ev["columns"])
-            rows = (np.concatenate(ev["rows"]) if ev["rows"]
+            parts = [ev["rows"][r] for r in sorted(ev["rows"])]
+            rows = (np.concatenate(parts) if parts
                     else np.zeros((0, n_cols), np.float32))
             out[name] = EventLog(counts=ev["counts"], rows=rows,
                                  columns=ev["columns"],
@@ -306,8 +354,14 @@ class StoreSink(Sink):
 
     def event_result(self):
         out = {}
+        order = self._plan.record_order() if self._plan is not None \
+            else None
         for name, (cols, cap) in self._event_meta.items():
             counts, rows = self.store.read_events(name)
+            if order is not None:
+                # the durable log is append-ordered (step-major across
+                # the partition's spans); materialize in record order
+                rows = reorder_event_rows(counts, rows, cap, order)
             out[name] = EventLog(counts=counts, rows=rows,
                                  columns=cols, capacity=cap)
         return out
@@ -326,6 +380,9 @@ class StoreSink(Sink):
 
     def committed_steps(self, plan) -> int:
         return self.store.committed_steps(plan)
+
+    def committed_plan(self) -> dict | None:
+        return self.store.load_plan()
 
     def write(self, step, indices, values):
         for name, vals in values.items():
@@ -473,6 +530,10 @@ class AsyncSink(Sink):
     def committed_steps(self, plan) -> int:
         self.flush()
         return self.inner.committed_steps(plan)
+
+    def committed_plan(self) -> dict | None:
+        self.flush()
+        return self.inner.committed_plan()
 
     # -- queued data plane ----------------------------------------------
     def write(self, step, indices, values):

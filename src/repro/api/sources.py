@@ -112,14 +112,23 @@ class Source:
         return np.full(np.asarray(indices).shape, PCM_DECODE_SCALE,
                        np.float32)
 
-    def stream(self, plan: ShardPlan, start: int,
-               stop: int) -> Iterator[np.ndarray]:
+    def stream(self, plan: ShardPlan, start: int, stop: int,
+               rows: "slice | None" = None) -> Iterator[np.ndarray]:
         """Yield one payload per plan step in [start, stop), in order.
 
         The engine always consumes host-fed sources through this
         iterator; the base implementation is the synchronous path
         (fetch each step inline when the driver asks for it).
+
+        ``rows`` restricts each step to a slice of the plan's leading
+        shard axis — the ``jax.distributed`` seam: a process feeding a
+        multi-host mesh streams only the shard rows its own devices
+        hold, so no host ever reads (or assembles) another worker's
+        files.  Single-process meshes leave it None and stream the full
+        ``(n_shards, chunk)`` payload.
         """
+        if rows is not None:
+            plan = RowSlicePlan(plan, rows)
         for step in range(start, stop):
             yield self.fetch(plan.step_indices(step))
 
@@ -145,6 +154,30 @@ class Source:
         the engine when the job finishes (or dies).  ``bind`` re-attaches
         them, so a closed source can run again.  Safe to call twice."""
         pass
+
+
+class RowSlicePlan:
+    """A view of a plan restricted to a slice of its shard rows.
+
+    Duck-types the stepping surface (``n_steps`` / ``step_indices`` /
+    ``step_mask``) that sources and the SpeculativeLoader drive, so one
+    process of a multi-host job can prefetch exactly its own shards'
+    records — its own files, under a file-aligned partition — while the
+    step/commit geometry stays the global plan's.
+    """
+
+    def __init__(self, plan, rows: slice):
+        self._plan = plan
+        self._rows = rows
+
+    def __getattr__(self, name):
+        return getattr(self._plan, name)
+
+    def step_indices(self, step: int) -> np.ndarray:
+        return self._plan.step_indices(step)[self._rows]
+
+    def step_mask(self, step: int) -> np.ndarray:
+        return self._plan.step_mask(step)[self._rows]
 
 
 class SynthSource(Source):
@@ -354,13 +387,22 @@ class PrefetchSource(Source):
     def close(self) -> None:
         self.inner.close()
 
-    def stream(self, plan: ShardPlan, start: int,
-               stop: int) -> Iterator[np.ndarray]:
+    def stream(self, plan: ShardPlan, start: int, stop: int,
+               rows: "slice | None" = None) -> Iterator[np.ndarray]:
         from repro.data.loader import SpeculativeLoader
+        if rows is not None:
+            plan = RowSlicePlan(plan, rows)
         # read tasks split along the manifest's file boundaries (when
-        # bound), so each task coalesces into sequential IO on one file
+        # bound), so each task coalesces into sequential IO on one
+        # file; a partitioned plan's span offsets join the cut set, so
+        # no read task ever straddles two worker slices even when a cut
+        # had to fall inside a file
         boundaries = None if self._manifest is None \
             else self._manifest.file_offsets
+        offsets = getattr(plan, "offsets", None)
+        if boundaries is not None and offsets is not None:
+            boundaries = np.union1d(boundaries,
+                                    np.asarray(offsets, np.int64))
         loader = SpeculativeLoader(
             self.inner.fetch, plan, workers=self.workers,
             overdecompose=self.overdecompose, depth=self.depth,

@@ -171,6 +171,21 @@ class ShardPlan:
         return min(self.start + (step + 1) * self.records_per_step,
                    self.stop)
 
+    def committed_records(self, step: int) -> int:
+        """Records covered by committed steps 0..step (inclusive) —
+        for this interleaved layout, exactly the cursor prefix."""
+        if step < 0:
+            return 0
+        return self.cursor_after(step) - self.start
+
+    def record_order(self) -> np.ndarray:
+        """Record ids in step-delivery order.  The interleaved layout
+        delivers ascending global prefixes, so this is the identity —
+        the contract :class:`repro.distributed.partition.PartitionPlan`
+        overrides (its shards advance in parallel, so the event-log
+        append order interleaves the spans)."""
+        return np.arange(self.start, self.stop, dtype=np.int64)
+
 
 def plan(manifest: DatasetManifest, n_shards: int, chunk_records: int,
          start: int = 0) -> ShardPlan:

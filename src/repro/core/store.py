@@ -180,7 +180,13 @@ class FeatureStore:
                     n_cols: int) -> tuple[np.ndarray, np.ndarray]:
         """Read a COMMITTED log from disk (no open_events needed):
         only the rows the cursor covers, which is all a crashed run
-        durably produced."""
+        durably produced.  Rows come back in APPEND order — ascending
+        record order for single-shard plans; partitioned plans
+        interleave their spans, so permute with
+        ``repro.api.sinks.reorder_event_rows`` and the stored plan's
+        ``record_order()`` (``load_plan`` +
+        ``repro.distributed.partition.plan_from_state``) when record
+        order matters."""
         st = self.load_cursor() or {}
         n_rows = int(st.get("events", {}).get(name, 0))
         counts = np.asarray(np.lib.format.open_memmap(
@@ -220,11 +226,23 @@ class FeatureStore:
             for a in self._arrays.values():
                 a.flush()
         cursor = plan.cursor_after(step)
-        state = {"cursor": cursor,
-                 "plan": {"start": plan.start, "stop": plan.stop,
-                          "n_shards": plan.n_shards,
-                          "chunk_records": plan.chunk_records},
-                 "live": live}
+        plan_state = {"start": plan.start, "stop": plan.stop,
+                      "n_shards": plan.n_shards,
+                      "chunk_records": plan.chunk_records}
+        offsets = getattr(plan, "offsets", None)
+        if offsets is not None:
+            # partitioned plans persist their span cut points, so a
+            # resume rebuilds the exact same shard layout regardless of
+            # the device count it runs on
+            plan_state["offsets"] = [int(o) for o in offsets]
+        # the cursor is a LOW WATERMARK under partitioned plans (the
+        # smallest uncommitted record); the explicit step count and the
+        # per-shard cursors carry the rest of the progress state
+        state = {"cursor": cursor, "step": int(step),
+                 "plan": plan_state, "live": live}
+        shard_cursors = getattr(plan, "shard_cursors", None)
+        if shard_cursors is not None:
+            state["shard_cursors"] = [int(c) for c in shard_cursors(step)]
         if self._events:
             # event rows become durable BEFORE the cursor that covers
             # them is renamed in; the recorded row counts are exactly
@@ -300,10 +318,25 @@ class FeatureStore:
             agg = {}
         return agg, float(st.get("live", 0.0))
 
+    def load_plan(self) -> dict | None:
+        """The plan geometry the committed cursor was written under, or
+        None — what the engine adopts on resume (re-partitioning a job
+        checkpointed at a different device count)."""
+        st = self.load_cursor()
+        return None if st is None else st.get("plan")
+
     def committed_steps(self, plan: ShardPlan) -> int:
-        """How many steps of ``plan`` are already fully committed."""
+        """How many steps of ``plan`` are already fully committed.
+
+        Cursors written by this release record the committed step
+        explicitly (the watermark cursor of a partitioned plan cannot
+        recover it when shard spans are heterogeneous); legacy cursors
+        fall back to the prefix arithmetic of the interleaved layout.
+        """
         st = self.load_cursor()
         if st is None:
             return 0
+        if "step" in st:
+            return max(0, int(st["step"]) + 1)
         done = st["cursor"] - plan.start
         return max(0, min(done // plan.records_per_step, plan.n_steps))

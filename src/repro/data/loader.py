@@ -78,7 +78,7 @@ class SpeculativeLoader:
         return out
 
     def _split_step(self, flat: np.ndarray) -> list[np.ndarray]:
-        """Split one step's (ascending) record indices into read tasks.
+        """Split one step's record indices into read tasks.
 
         Without ``boundaries``: ~equal arbitrary slices.  With them:
         cut wherever the indices cross a file/block boundary first, so a
@@ -88,6 +88,13 @@ class SpeculativeLoader:
         are re-split at record granularity (a one-file dataset still
         over-decomposes), adjacent smaller runs merge up to the target
         (a many-tiny-files dataset doesn't explode the task count).
+
+        The cut logic only compares *consecutive* elements, so it needs
+        no global ordering: a partitioned plan's step — one contiguous
+        chunk per worker span, exhausted spans padded with the
+        out-of-range index ``stop`` — splits into per-span, per-file
+        tasks (padding runs land in their own task and read as zeros),
+        which is what keeps every read local to one worker's files.
         """
         if self.boundaries is None:
             return [p for p in np.array_split(flat, self.overdecompose)

@@ -259,6 +259,23 @@ class WavRecordReader:
         return np.stack(flat).reshape(*indices.shape, self.m.record_size)
 
 
+def files_touched(m: DatasetManifest, indices) -> np.ndarray:
+    """Sorted unique file ids holding ``indices`` (out-of-range indices
+    — a partitioned plan's padding — are ignored).
+
+    The read-locality invariant of the sharded execution layer is
+    stated in terms of this set: a worker slice's steps must only ever
+    touch files inside its ``[file_lo, file_hi)`` footprint, so each
+    process opens none of its peers' files.
+    """
+    flat = np.asarray(indices).reshape(-1).astype(np.int64)
+    flat = flat[(flat >= 0) & (flat < m.n_records)]
+    if not flat.size:
+        return np.zeros(0, np.int64)
+    fi, _ = m.locate_many(flat)
+    return np.unique(fi)
+
+
 class BlockReader:
     """Block-coalesced batch reader: same contract as
     :class:`WavRecordReader`, minimal file-system traffic.

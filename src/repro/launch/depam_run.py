@@ -168,6 +168,16 @@ def main() -> None:
     ap.add_argument("--event-capacity", type=int, default=None,
                     help="max events kept per record (true counts are "
                          "still reported on overflow; default: params)")
+    ap.add_argument("--data-parallel", type=int, default=None,
+                    help="run data-parallel over the first N visible "
+                         "devices (a (data=N, model=1) host mesh); "
+                         "default: single-device")
+    ap.add_argument("--shards", type=int, default=None,
+                    help="logical worker-slice count for the partition "
+                         "(must be a multiple of --data-parallel); "
+                         "fixing it makes results bitwise-identical "
+                         "across device counts — default: one slice "
+                         "per data-parallel device")
     ap.add_argument("--prefetch-depth", type=int, default=2,
                     help="plan steps of host read-ahead for the "
                          "pipelined executor (ignored with --sync-io)")
@@ -209,6 +219,18 @@ def main() -> None:
     store = FeatureStore(a.out)
     j = (api.job(m, p).features(*feats).chunk(a.chunk_records)
          .kernels(not a.no_kernels).to(store).window(**win_kwargs))
+    if a.data_parallel is not None:
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh(data=a.data_parallel)
+        j = j.on(mesh)
+        print(f"[depam] mesh: data={a.data_parallel} "
+              f"(of {len(mesh.devices.flat)} mesh devices)")
+    if a.shards is not None:
+        j = j.shards(a.shards)
+        from repro.distributed.partition import build_partition
+        part = build_partition(m, a.shards, a.chunk_records)
+        print(f"[depam] partition: {a.shards} worker slices, balance "
+              f"ratio {part.balance_ratio:.3f}")
     wav_dir = a.data_root or a.wav_dir
     if wav_dir:
         j = j.source(api.WavSource(wav_dir))
@@ -243,8 +265,7 @@ def main() -> None:
     # throughput over the records processed THIS run (a resumed job
     # only recomputes the remaining steps)
     pl_ = out.plan
-    done = pl_.stop - min(pl_.start + start_step * pl_.records_per_step,
-                          pl_.stop)
+    done = (pl_.stop - pl_.start) - pl_.committed_records(start_step - 1)
     done_gb = done * m.record_size * 4 / 1e9
     gb_min = done_gb / (dt / 60)
     rec_s = done / dt

@@ -14,15 +14,35 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_host_mesh(model: int = 1):
-    """Mesh over whatever devices exist (CPU smoke / tiny CI meshes)."""
-    n = len(jax.devices())
-    if model < 1 or n % model != 0:
+def make_host_mesh(model: int = 1, data: int | None = None):
+    """Mesh over host devices (CPU smoke / tiny CI meshes).
+
+    Default: all visible devices, split ``(data=n//model, model)``.
+    With ``data=``: a submesh over the FIRST ``data * model`` devices —
+    how a scaling sweep runs the same job at 1, 2, 4, ... data shards
+    inside one process without re-initializing jax.
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devs = jax.devices()
+    n = len(devs)
+    if model < 1 or (data is None and n % model != 0):
         raise ValueError(
-            f"make_host_mesh(model={model}): {n} visible device(s) "
-            f"cannot form a (data={n}//{model}, model={model}) mesh — "
-            f"device count must be a positive multiple of `model`")
-    return jax.make_mesh((n // model, model), ("data", "model"))
+            f"make_host_mesh(model={model}, data={data}): {n} visible "
+            f"device(s) cannot form a (data={n}//{max(model, 1)}, "
+            f"model={model}) mesh — device count must be a positive "
+            f"multiple of `model`")
+    if data is None:
+        return jax.make_mesh((n // model, model), ("data", "model"))
+    want = int(data) * model
+    if data < 1 or want > n:
+        raise ValueError(
+            f"make_host_mesh(model={model}, data={data}): requested a "
+            f"(data={data}, model={model}) mesh = {want} device(s) but "
+            f"only {n} visible")
+    grid = np.asarray(devs[:want]).reshape(int(data), model)
+    return Mesh(grid, ("data", "model"))
 
 
 def data_axes(mesh) -> tuple[str, ...]:

@@ -1,0 +1,322 @@
+"""The sharded execution layer: partition plans, worker slices, mesh
+builders, cursor layout, and the N-device == 1-device bitwise matrix.
+
+Property-based invariants run under hypothesis when it is installed
+(an optional dev dependency) AND under an always-on seeded-random
+fallback loop, so the partition contract is exercised in minimal CI
+environments too.  The multi-device matrix runs in subprocesses with
+``--xla_force_host_platform_device_count`` (the only way to get >1
+device on a CPU host; the flag must be set before jax initializes).
+"""
+import os
+import subprocess
+import sys
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.core.manifest import DatasetManifest, plan
+from repro.core.store import FeatureStore
+from repro.data.wavio import files_touched
+from repro.distributed.partition import (
+    PartitionPlan, WorkerSlice, adopt_plan, build_partition,
+    plan_from_state)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # stubs so decorators at class-body time work
+    HAVE_HYPOTHESIS = False
+
+    def given(*a, **k):
+        return lambda f: f
+
+    def settings(*a, **k):
+        return lambda f: f
+
+    class _St:
+        def __call__(self, *a, **k):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    st = _St()
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS,
+    reason="optional dev dependency: pip install hypothesis")
+
+
+def heterogeneous_manifest(file_records):
+    return DatasetManifest.from_files(
+        tuple(int(r) for r in file_records), record_size=64, fs=100.0,
+        seed=7)
+
+
+def check_partition_invariants(m, n_shards, chunk=3):
+    """The full partition contract, asserted for one (manifest, L)."""
+    p = build_partition(m, n_shards, chunk)
+    offs = np.asarray(p.offsets)
+    n = m.n_records
+
+    # shard spans are disjoint, ordered, and cover [0, N) exactly
+    assert offs[0] == 0 and offs[-1] == n
+    assert (np.diff(offs) >= 0).all()
+    assert p.n_shards == n_shards
+
+    # worker slices agree with the offsets and carry real file footprints
+    slices = p.slices(m)
+    assert [s.index for s in slices] == list(range(n_shards))
+    for s in slices:
+        assert (s.lo, s.hi) == (offs[s.index], offs[s.index + 1])
+        if s.n_records:
+            touched = files_touched(m, np.arange(s.lo, s.hi))
+            assert touched.min() >= s.file_lo
+            assert touched.max() < s.file_hi
+
+    # every record appears in exactly one step slot; padding is `stop`
+    seen = []
+    for step in range(p.n_steps):
+        idx = p.step_indices(step)
+        msk = p.step_mask(step)
+        assert idx.shape == (n_shards, chunk)
+        assert (idx[~msk] == p.stop).all()
+        seen.extend(idx[msk].tolist())
+    assert sorted(seen) == list(range(n))
+
+    # balance ratio is exactly the benchmark's max/mean formula
+    per_shard = np.diff(offs)
+    if n:
+        assert p.balance_ratio == pytest.approx(
+            per_shard.max() / (n / n_shards))
+
+    # cuts land on file boundaries whenever every file is small enough
+    # that the nearest boundary is within half an ideal span
+    if m.n_files and n:
+        fr = np.asarray([m.records_in_file(i) for i in range(m.n_files)])
+        if fr.max() < n / (2 * n_shards) and m.n_files >= n_shards:
+            fo = set(np.asarray(m.file_offsets).tolist())
+            for cut in offs[1:-1]:
+                assert int(cut) in fo, (offs, sorted(fo))
+
+    # record_order is the permutation the event log is appended in
+    order = p.record_order()
+    assert sorted(order.tolist()) == list(range(n))
+    return p
+
+
+class TestPartitionProperties:
+    def test_seeded_random_manifests(self):
+        """Always-on fallback: 60 random heterogeneous manifests."""
+        rng = np.random.RandomState(0)
+        for _ in range(60):
+            n_files = int(rng.randint(1, 12))
+            fr = rng.randint(0, 15, size=n_files)
+            if fr.sum() == 0:
+                fr[0] = 1
+            m = heterogeneous_manifest(fr)
+            L = int(rng.choice([1, 2, 3, 4, 8]))
+            chunk = int(rng.randint(1, 5))
+            check_partition_invariants(m, L, chunk)
+
+    @needs_hypothesis
+    @settings(max_examples=80, deadline=None)
+    @given(fr=st.lists(st.integers(0, 20), min_size=1, max_size=12)
+           .filter(lambda x: sum(x) > 0),
+           L=st.sampled_from([1, 2, 3, 4, 6, 8]),
+           chunk=st.integers(1, 5))
+    def test_hypothesis_manifests(self, fr, L, chunk):
+        check_partition_invariants(heterogeneous_manifest(fr), L, chunk)
+
+    def test_uniform_dataset_cuts_on_files_perfectly(self):
+        m = DatasetManifest(n_files=8, records_per_file=5,
+                            record_size=64, fs=100.0, seed=0)
+        p = build_partition(m, 4, 2)
+        assert p.offsets == (0, 10, 20, 30, 40)
+        assert p.balance_ratio == 1.0
+        for s in p.slices(m):
+            assert s.n_files == 2
+
+    def test_single_giant_file_falls_back_to_records(self):
+        """One file bigger than the span: record-granularity split
+        still balances (the cut can't be on a boundary)."""
+        m = heterogeneous_manifest([100])
+        p = build_partition(m, 4, 8)
+        assert p.offsets == (0, 25, 50, 75, 100)
+        assert p.balance_ratio == 1.0
+
+
+class TestStepGeometry:
+    def test_cursor_is_low_watermark(self):
+        m = heterogeneous_manifest([7, 14, 7, 7])
+        p = build_partition(m, 4, 3)
+        done: set[int] = set()
+        for step in range(p.n_steps):
+            idx, msk = p.step_indices(step), p.step_mask(step)
+            done.update(idx[msk].tolist())
+            # every record below the cursor is done, and the cursor's
+            # own record (if any) is not — the exact resume contract
+            cur = p.cursor_after(step)
+            assert all(r in done for r in range(p.start, cur))
+            if cur < p.stop:
+                assert cur not in done
+            assert p.committed_records(step) == len(done)
+        assert p.cursor_after(p.n_steps - 1) == p.stop
+        assert p.cursor_after(-1) == p.start
+
+    def test_record_order_matches_append_order(self):
+        m = heterogeneous_manifest([5, 9, 2])
+        p = build_partition(m, 3, 2)
+        appended = []
+        for step in range(p.n_steps):
+            idx, msk = p.step_indices(step), p.step_mask(step)
+            appended.extend(idx[msk].tolist())
+        assert p.record_order().tolist() == appended
+
+    def test_legacy_plan_record_order_is_identity(self):
+        m = DatasetManifest(n_files=2, records_per_file=6,
+                            record_size=64, fs=100.0, seed=0)
+        pl_ = plan(m, 3, 2)
+        assert pl_.record_order().tolist() == list(range(12))
+        assert pl_.committed_records(pl_.n_steps - 1) == 12
+
+
+class TestPlanAdoption:
+    def test_round_trip_through_store(self, tmp_path):
+        m = heterogeneous_manifest([6, 3, 9])
+        p = build_partition(m, 3, 2)
+        store = FeatureStore(str(tmp_path))
+        store.commit_state(p, step=1, agg=None, live=0.0)
+        state = store.load_plan()
+        rebuilt = plan_from_state(state)
+        assert isinstance(rebuilt, PartitionPlan)
+        assert rebuilt == p
+        assert store.committed_steps(p) == 2
+
+    def test_committed_geometry_wins(self):
+        m = heterogeneous_manifest([6, 3, 9])
+        old = build_partition(m, 6, 1)
+        state = {"start": old.start, "stop": old.stop,
+                 "n_shards": old.n_shards,
+                 "chunk_records": old.chunk_records,
+                 "offsets": list(old.offsets)}
+        new = build_partition(m, 3, 2)
+        adopted = adopt_plan(new, state)
+        assert adopted == old
+
+    def test_changed_dataset_refused(self):
+        m = heterogeneous_manifest([6, 3, 9])
+        p = build_partition(m, 3, 2)
+        state = {"start": 0, "stop": p.stop + 5, "n_shards": 3,
+                 "chunk_records": 2,
+                 "offsets": [0, 5, 10, p.stop + 5]}
+        with pytest.raises(ValueError, match="dataset changed"):
+            adopt_plan(p, state)
+
+
+class TestMeshBuilders:
+    def test_data_override_submesh(self):
+        import jax
+        from repro.launch.mesh import data_size, make_host_mesh
+        mesh = make_host_mesh(data=1)
+        assert data_size(mesh) == 1
+        assert mesh.shape["model"] == 1
+        assert list(np.asarray(mesh.devices).flat) == [jax.devices()[0]]
+
+    def test_oversubscribed_error_names_requested_shape(self):
+        import jax
+        from repro.launch.mesh import make_host_mesh
+        n = len(jax.devices())
+        with pytest.raises(ValueError) as ei:
+            make_host_mesh(data=n + 1)
+        assert f"data={n + 1}" in str(ei.value)
+        assert "model=1" in str(ei.value)
+
+    def test_job_rejects_indivisible_shards(self):
+        from repro import api
+        from repro.core.params import PARAM_SET_1
+        from repro.launch.mesh import make_host_mesh
+        m = DatasetManifest(n_files=2, records_per_file=4,
+                            record_size=PARAM_SET_1.record_size,
+                            fs=PARAM_SET_1.fs, seed=0)
+        j = (api.job(m, PARAM_SET_1).shards(3)
+             .on(make_host_mesh(data=1)))
+        j._plan()                      # 3 % 1 == 0: fine
+        with pytest.raises(ValueError, match="shards"):
+            api.job(m, PARAM_SET_1).shards(0)
+
+
+_MATRIX_CODE = r"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=8")
+os.environ["JAX_PLATFORMS"] = "cpu"
+import dataclasses, tempfile
+import numpy as np
+from repro import api
+from repro.core.manifest import DatasetManifest
+from repro.core.params import PARAM_SET_1
+from repro.core.store import FeatureStore
+from repro.data import wavio
+from repro.launch.mesh import make_host_mesh
+
+p = dataclasses.replace(PARAM_SET_1, record_size_sec=0.5)
+m = DatasetManifest.from_files((3, 6, 3, 4, 4), record_size=p.record_size,
+                               fs=p.fs, seed=3)
+root = tempfile.mkdtemp()
+wavio.write_dataset(root, m)
+
+def run(d, payload, store_dir=None, limit=None):
+    j = (api.job(m, p).features("welch", "spl", "ltsa", "spd")
+         .window(records=3).chunk(2).kernels(False).shards(4)
+         .events(threshold_db=40.0).source(api.WavSource(root)))
+    if payload == "int16":
+        j = j.payload("int16")
+    if d is not None:
+        j = j.on(make_host_mesh(data=d))
+    if store_dir:
+        j = j.to(FeatureStore(store_dir))
+    if limit:
+        j = j.limit(limit)
+    return j.run()
+
+def check(a, b, tag):
+    for k in a.features:
+        assert np.array_equal(a.features[k], b.features[k]), (tag, k)
+    for k in a.windows:
+        assert np.array_equal(a.windows[k], b.windows[k]), (tag, k)
+    for k in a.epoch:
+        assert np.array_equal(a.epoch[k], b.epoch[k]), (tag, k)
+    assert set(a.events) == set(b.events)
+    for k in a.events:
+        assert np.array_equal(a.events[k].counts, b.events[k].counts), \
+            (tag, k)
+        assert np.array_equal(a.events[k].rows, b.events[k].rows), (tag, k)
+
+for payload in ("float32", "int16"):
+    ref = run(None, payload)                      # no mesh, L=4
+    for d in (1, 2, 4):
+        check(ref, run(d, payload), f"fresh/{payload}/D={d}")
+    # resume matrix: 2 steps at D=4, finish at D=2 — must equal fresh
+    sd = tempfile.mkdtemp()
+    run(4, payload, store_dir=sd, limit=2)
+    check(ref, run(2, payload, store_dir=sd), f"resumed/{payload}")
+print("MATRIX-OK")
+"""
+
+
+class TestMultiDeviceBitwise:
+    def test_fresh_and_resumed_matrix(self):
+        """{fresh, resumed-across-device-count} x {float32, int16}:
+        every device count in {1, 2, 4} (plus no-mesh) is bitwise-
+        identical on dense, windowed, epoch, and event outputs."""
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(
+            os.path.dirname(__file__), "..", "src")
+        out = subprocess.run([sys.executable, "-c", _MATRIX_CODE],
+                             env=env, capture_output=True, text=True,
+                             timeout=1200)
+        assert "MATRIX-OK" in out.stdout, \
+            out.stdout[-1000:] + out.stderr[-3000:]
