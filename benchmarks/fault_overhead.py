@@ -1,0 +1,89 @@
+"""Fault-free overhead gate: the resilience machinery must be ~free.
+
+The fault-tolerance layer (PR 9) composes its wrappers only when a job
+opts in (``.retry()`` / ``.tolerate()`` / ``.inject()``), so the
+default path carries zero added layers by construction.  This benchmark
+measures the opted-in-but-fault-free cost — ResilientSource/ResilientSink
+wrapping, the quarantine mask check per step, the armed store crash
+points — against the no-hooks path on the same workload, and GATES it:
+fault-free records/s must stay within ``gate_pct`` (2%) of no-hooks.
+A regression here means resilience stopped being pay-as-you-go.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro import api
+from repro.core.manifest import DatasetManifest
+from repro.core.params import DepamParams
+from repro.faults import FaultPlan
+
+
+def _best_of_interleaved(fns, iters):
+    """Min wall seconds per function, measured A/B-interleaved so OS
+    scheduler drift hits both variants equally — an overhead gate on
+    medians of separated batches flaps on exactly that drift."""
+    best = [float("inf")] * len(fns)
+    for fn in fns:
+        fn()                                   # warm (compile, caches)
+    for _ in range(iters):
+        for i, fn in enumerate(fns):
+            t0 = time.perf_counter()
+            fn()
+            best[i] = min(best[i], time.perf_counter() - t0)
+    return best
+
+
+def run(n_records=64, record_sec=0.5, iters=8, gate_pct=2.0):
+    p = DepamParams(nfft=256, window_size=256, window_overlap=128,
+                    record_size_sec=record_sec)
+    m = DatasetManifest(n_files=1, records_per_file=n_records,
+                        record_size=p.record_size, fs=p.fs, seed=1)
+    rng = np.random.default_rng(0)
+    data = rng.standard_normal((n_records, p.record_size)) \
+        .astype(np.float32)
+
+    def reader(idx):
+        return data[np.clip(idx, 0, n_records - 1)]
+
+    def base():
+        return (api.job(m, p).features("welch", "spl").chunk(8)
+                .source(api.ReaderSource(reader)))
+
+    def no_hooks():
+        base().run()
+
+    def hooked():
+        # every opt-in armed, nothing firing: an EMPTY FaultPlan
+        # exercises the armed-store attribute checks, retry/tolerate
+        # compose the Resilient wrappers around source and sink
+        (base().inject(FaultPlan()).retry(attempts=3)
+         .tolerate(bad_records=4).run())
+
+    t_plain, t_hooked = _best_of_interleaved([no_hooks, hooked], iters)
+    rps_plain = n_records / t_plain
+    rps_hooked = n_records / t_hooked
+    overhead_pct = (t_hooked / t_plain - 1.0) * 100.0
+
+    rows = [common.row(
+        "fault_overhead/fault_free_vs_no_hooks", t_hooked * 1e6,
+        f"no_hooks_us={t_plain * 1e6:.1f};"
+        f"records_per_s={rps_hooked:.1f};"
+        f"no_hooks_records_per_s={rps_plain:.1f};"
+        f"overhead_pct={overhead_pct:.2f};"
+        f"gate_pct={gate_pct:.1f}")]
+    if overhead_pct > gate_pct:
+        raise RuntimeError(
+            f"fault-free overhead gate FAILED: the opted-in resilience "
+            f"path runs {overhead_pct:.2f}% slower than the no-hooks "
+            f"path (gate: {gate_pct:.1f}%) — {rps_hooked:.1f} vs "
+            f"{rps_plain:.1f} records/s.  The fault machinery must stay "
+            f"pay-as-you-go; profile the Resilient wrappers.")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,12 +1,12 @@
 """Benchmark aggregator — one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV and writes the consolidated
-perf-trajectory snapshot ``BENCH_PR8.json`` at the repo root: one entry
+perf-trajectory snapshot ``BENCH_PR9.json`` at the repo root: one entry
 per benchmark with µs/call plus every derived metric (records/s,
 host→device bytes/record, events/s, file opens/step, step-latency
-percentiles, compile-cache hits, speedups...), so future PRs can diff
-against a recorded baseline instead of re-deriving one
-(``BENCH_PR7.json`` remains as the previous PR's recorded numbers).
+percentiles, compile-cache hits, fault-free overhead, speedups...), so
+future PRs can diff against a recorded baseline instead of re-deriving
+one (``BENCH_PR8.json`` remains as the previous PR's recorded numbers).
 Snapshots are keyed by config (``fast`` vs ``full``) and merged into
 the existing file, so a ``--fast`` dev run never clobbers full-config
 baseline numbers with non-comparable ones.
@@ -51,10 +51,10 @@ def main() -> None:
     fast = "--fast" in sys.argv
     rows = ["name,us_per_call,derived"]
 
-    from benchmarks import async_pipeline, events, fig3_1_single_node, \
-        fig3_2_speedup, job_pipeline, serve_multitenant, \
-        table2_1_param_sets, roofline_report, transfer, wav_io, \
-        windowed_agg
+    from benchmarks import async_pipeline, events, fault_overhead, \
+        fig3_1_single_node, fig3_2_speedup, job_pipeline, \
+        serve_multitenant, table2_1_param_sets, roofline_report, \
+        transfer, wav_io, windowed_agg
 
     rows += fig3_1_single_node.run(
         workload_records=(4, 8) if fast else (4, 8, 16))
@@ -88,12 +88,14 @@ def main() -> None:
         file_records=(4, 4) if fast else (8, 8, 8),
         record_sec=0.25 if fast else 0.5,
         iters=1 if fast else 2)
+    rows += fault_overhead.run(n_records=32 if fast else 64,
+                               iters=5 if fast else 8)
     rows += roofline_report.run()
 
     print("\n".join(rows))
 
     out_path = os.path.abspath(os.path.join(
-        os.path.dirname(__file__), os.pardir, "BENCH_PR8.json"))
+        os.path.dirname(__file__), os.pardir, "BENCH_PR9.json"))
     snapshot: dict = {}
     if os.path.exists(out_path):
         try:

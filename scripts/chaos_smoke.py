@@ -1,0 +1,150 @@
+#!/usr/bin/env python
+"""chaos-smoke: the fixed-seed fault-injection matrix (CI gate).
+
+Replays deterministic fault schedules against a small wav corpus across
+{sync,async} x {float32,int16} x {sharded,unsharded} and asserts the
+bitwise-or-loud invariant end to end:
+
+  * a healed run (transient reads + sink writes + stragglers, under
+    bounded retry) finishes bitwise-identical to the fault-free run of
+    the same configuration;
+  * a quarantined run (deterministically corrupt record, under
+    ``.tolerate``) masks exactly the scheduled record, matches the
+    fault-free run on every surviving record, and reports loudly;
+  * an unhandled fault fails loudly, naming the fault — never returns;
+  * a commit-protocol crash (``crash_after_sidecar``) leaves a store a
+    plain resume completes bitwise from.
+
+Usage: PYTHONPATH=src python scripts/chaos_smoke.py [--seed N]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import tempfile
+import warnings
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+from repro import api                                  # noqa: E402
+from repro.core.manifest import DatasetManifest        # noqa: E402
+from repro.core.params import DepamParams              # noqa: E402
+from repro.data.wavio import write_dataset             # noqa: E402
+from repro.faults import FaultPlan, FaultSpec          # noqa: E402
+from repro.faults.errors import (CorruptRecordError,   # noqa: E402
+                                 InjectedCrash)
+
+P = DepamParams(nfft=256, window_size=256, window_overlap=128,
+                record_size_sec=0.25)
+M = DatasetManifest(n_files=3, records_per_file=4,
+                    record_size=P.record_size, fs=P.fs, seed=11)
+FAST = dict(base_delay=0.0, max_delay=0.0, jitter=0.0)
+
+MATRIX = [dict(payload=pl, sync=sync, shards=sh)
+          for sh in (1, 2) for sync in (True, False)
+          for pl in ("float32", "int16")]
+
+
+def build(wavs, cfg, store=None):
+    j = (api.job(M, P).features("welch", "spl").chunk(4)
+         .source(api.WavSource(wavs)).payload(cfg["payload"]))
+    if cfg["shards"] > 1:
+        j = j.shards(cfg["shards"])
+    if not cfg["sync"]:
+        j = j.async_io(depth=2)
+    if store is not None:
+        j = j.to(store)
+    return j
+
+
+def check_bitwise(got, want, label, skip=()):
+    keep = [i for i in range(M.n_records) if i not in skip]
+    for name in ("welch", "spl"):
+        assert np.array_equal(np.asarray(got[name])[keep],
+                              np.asarray(want[name])[keep]), \
+            f"{label}: {name} not bitwise"
+    if not skip:
+        assert np.array_equal(np.asarray(got["mean_welch"]),
+                              np.asarray(want["mean_welch"])), \
+            f"{label}: mean_welch not bitwise"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seed", type=int, default=7)
+    seed = ap.parse_args().seed
+
+    with tempfile.TemporaryDirectory() as tmp:
+        wavs = os.path.join(tmp, "wavs")
+        os.makedirs(wavs)
+        write_dataset(wavs, M)
+
+        for n, cfg in enumerate(MATRIX):
+            label = (f"{'sync' if cfg['sync'] else 'async'}/"
+                     f"{cfg['payload']}/shards={cfg['shards']}")
+            want = build(wavs, cfg).run()
+
+            # healed: scheduled transients under bounded retry
+            plan = FaultPlan.scheduled(
+                seed=seed, n_records=M.n_records, n_steps=3,
+                transient_reads=2, sink_writes=1, slow_reads=1,
+                slow_s=0.002, transient_times=2)
+            store = os.path.join(tmp, f"heal-{n}")
+            got = (build(wavs, cfg, store).inject(plan)
+                   .retry(attempts=3, **FAST).run())
+            assert plan.stats()["firings"] > 0, \
+                f"{label}: schedule never exercised"
+            check_bitwise(got, want, label)
+
+            # quarantined: deterministic corrupt record, accounted
+            qplan = FaultPlan([FaultSpec("record_corrupt", record=6,
+                                         times=None)])
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore", RuntimeWarning)
+                qgot = (build(wavs, cfg).inject(qplan)
+                        .tolerate(bad_records=1).run())
+            assert qgot.quarantine["records"] == [6], \
+                f"{label}: quarantine set {qgot.quarantine['records']}"
+            check_bitwise(qgot, want, label, skip=(6,))
+
+            # loud: the same fault without .tolerate() must raise,
+            # naming the fault — never return a silent wrong answer
+            try:
+                build(wavs, cfg).inject(
+                    FaultPlan([FaultSpec("record_corrupt", record=6,
+                                         times=None)])).run()
+            except CorruptRecordError as e:
+                assert "record_corrupt" in str(e)
+            else:
+                raise AssertionError(f"{label}: corrupt record "
+                                     f"returned silently")
+            print(f"ok  {label}: healed bitwise, quarantine accounted, "
+                  f"strict loud ({plan.stats()['firings']} firings)")
+
+        # commit-protocol crash + resume, sharded
+        cfg = dict(payload="float32", sync=True, shards=2)
+        want = build(wavs, cfg).run()
+        store = os.path.join(tmp, "crash")
+        try:
+            build(wavs, cfg, store).inject(FaultPlan(
+                [FaultSpec("crash_after_sidecar", times=1,
+                           after_visits=1)])).run()
+        except InjectedCrash:
+            pass
+        else:
+            raise AssertionError("crash point never fired")
+        resumed = build(wavs, cfg, store).run()
+        check_bitwise(resumed, want, "crash-resume")
+        print("ok  crash_after_sidecar: loud, resume bitwise")
+
+    print(f"chaos-smoke PASSED: {len(MATRIX)} configs x "
+          f"{{healed, quarantined, loud}} + crash/resume, seed={seed}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -56,6 +56,7 @@ from repro.data.wavio import scan_dataset
 from .sinks import (AsyncSink, CallbackSink, EventLog, MemorySink, Sink,
                     StoreSink, as_sink)
 from .job import JobResult, SoundscapeJob, job
+from repro.faults import FaultPlan, FaultSpec, RetryPolicy
 
 __all__ = [
     "ExecOptions",
@@ -70,4 +71,5 @@ __all__ = [
     "Sink", "MemorySink", "StoreSink", "CallbackSink", "AsyncSink",
     "EventLog", "as_sink",
     "SoundscapeJob", "JobResult", "job",
+    "FaultPlan", "FaultSpec", "RetryPolicy",
 ]

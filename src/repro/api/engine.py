@@ -472,7 +472,8 @@ class JobStepper:
                  max_steps: int | None = None,
                  options: ExecOptions | None = None,
                  window: Window | None = None,
-                 compiler: Compiler | None = None):
+                 compiler: Compiler | None = None,
+                 quarantine=None):
         self.m = m
         self.p = p
         self.specs = tuple(specs)
@@ -486,6 +487,10 @@ class JobStepper:
         self.options = options or ExecOptions()
         self.window = window
         self.compiler = compiler or DEFAULT_COMPILER
+        # the job's bad-record set (repro.faults.Quarantine), shared
+        # with the ResilientSource that populates it; None = strict mode
+        # (any bad record fails the job)
+        self.quarantine = quarantine
         self._started = False
         self._closed = False
         self._result = None
@@ -558,6 +563,24 @@ class JobStepper:
                 name: (s.columns, p.event_capacity)
                 for name, s in self._ragged.items()})
         start_step, resumed = self.sink.resume_state()
+        if resumed is not None:
+            # the quarantine set rides the commit as an opaque agg key;
+            # strip it before the strict reduction-key match and restore
+            # it into this run's set, so resumed masking (and the spent
+            # budget) is bitwise-identical to the uninterrupted run
+            prev_agg, prev_live = resumed
+            q = prev_agg.pop("__quarantine__", None)
+            if q is not None and np.asarray(q).size:
+                if self.quarantine is None:
+                    raise ValueError(
+                        f"cannot resume: the committed cursor carries "
+                        f"{np.asarray(q).size} quarantined record(s) "
+                        f"but this job does not tolerate bad records; "
+                        f"re-run with .tolerate(bad_records="
+                        f"{np.asarray(q).size}) or more, or use a "
+                        f"fresh store directory")
+                self.quarantine.seed(q)
+            resumed = (prev_agg, prev_live)
         self._agg_state = _init_reduce_state(bindings, resumed)
 
         self._n_steps = pl_.n_steps if self.max_steps is None \
@@ -652,6 +675,17 @@ class JobStepper:
             # beyond what the live source will ever deliver
             self._exhausted = True
             return False
+        payload = None
+        if not source.device_synth:
+            # fetch BEFORE freezing the mask: a tolerant source may
+            # quarantine records of this very step while reading them
+            payload = np.asarray(next(self._stream))
+        if self.quarantine is not None and len(self.quarantine):
+            # quarantined records carry zero payloads; masking them
+            # keeps them out of every reduction and leaves their rows
+            # at the feature's fill value — reduction identities, never
+            # a silently-wrong number
+            mask = mask & ~self.quarantine.mask_for(idx)
         dmask = jnp.asarray(mask)
         wids = {k: jnp.asarray(w.ids(idx, self.m))
                 for k, w in self._wins.items()}
@@ -662,7 +696,6 @@ class JobStepper:
             # raw-PCM transport: ship the int16 bytes as-is (half the
             # bus traffic, still donated) + the tiny per-record
             # decode-scale sidecar; kernels dequantize in VMEM
-            payload = np.asarray(next(self._stream))
             if payload.dtype != np.int16:
                 raise TypeError(
                     f"int16 payload path got {payload.dtype} from "
@@ -673,8 +706,9 @@ class JobStepper:
                                             jnp.float32),
                                 dmask)
         else:
-            payload = np.asarray(next(self._stream), np.float32)
-            out = self._step_fn(self._ship(payload), dmask)
+            out = self._step_fn(self._ship(payload.astype(np.float32,
+                                                          copy=False)),
+                                dmask)
         self._agg_state = self._agg_fn(self._agg_state, out, dmask, wids)
         # start the device→host transfers now; block in _drain_one —
         # reduction-only values never cross back to the host
@@ -752,6 +786,12 @@ class JobStepper:
             agg_host = {k: np.asarray(v)
                         for k, v in commit_state.items()
                         if k != "__live__"}
+            if self.quarantine is not None:
+                # snapshot of the bad-record set rides the commit as an
+                # opaque key (bad records are deterministic-by-record,
+                # so a snapshot that is "ahead" of this step's cursor
+                # only pre-masks records that would re-fail anyway)
+                agg_host["__quarantine__"] = self.quarantine.as_array()
             self._flush_closed(agg_host, self.pl.cursor_after(step))
             self.sink.commit(self.pl, step, agg_host,
                              float(commit_state["__live__"]))
@@ -761,11 +801,13 @@ class JobStepper:
         ones included) and the epoch aggregates; idempotent.
 
         Returns (features, epoch, windows, window_edges, n_records,
-        events, plan) — see job.JobResult.  ``events`` is the sink's
-        materialized {name: EventLog} for ragged features (None when
-        the job has none, or the sink streams).  Rows flushed mid-job
-        came from the same committed float32 state, so the job-end
-        pass is byte-identical to them.
+        events, plan, quarantine) — see job.JobResult.  ``events`` is
+        the sink's materialized {name: EventLog} for ragged features
+        (None when the job has none, or the sink streams);
+        ``quarantine`` is the bad-record report dict (None unless the
+        job tolerates bad records).  Rows flushed mid-job came from the
+        same committed float32 state, so the job-end pass is
+        byte-identical to them.
         """
         assert self._started, "JobStepper.finish before start()"
         if self._result is not None:
@@ -791,8 +833,21 @@ class JobStepper:
         window_edges = {name: self._edges[name].copy()
                         for name in self._windows_out}
         events = self.sink.event_result() if self._ragged else None
+        qreport = None
+        if self.quarantine is not None:
+            qreport = self.quarantine.report()
+            if qreport["records"]:
+                import warnings
+                warnings.warn(
+                    f"{len(qreport['records'])} record(s) quarantined "
+                    f"as bad data (budget "
+                    f"{qreport['budget']}): {qreport['records']} — "
+                    f"masked to reduction identities in aggregates, "
+                    f"fill values in per-record features; see "
+                    f"JobResult.quarantine for the per-record reasons",
+                    RuntimeWarning, stacklevel=2)
         self._result = (self.sink.result(), epoch, self._windows_out,
-                        window_edges, live, events, self.pl)
+                        window_edges, live, events, self.pl, qreport)
         return self._result
 
     def close(self):
@@ -834,7 +889,8 @@ def run_job(m: DatasetManifest, p: DepamParams, specs: list[FeatureSpec],
     ``window`` is the job's time resolution: every ``job``-window
     reduction accumulates at it (epoch — one window — when None).
     Returns (features, epoch, windows, window_edges, n_records, events,
-    plan) — see job.JobResult.  This is the blocking single-tenant
+    plan, quarantine) — see job.JobResult.  This is the blocking
+    single-tenant
     driver: one
     :class:`JobStepper` run start-to-finish, with source/sink released
     in ``finally`` even when binding, sink open, resume validation, or

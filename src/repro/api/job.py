@@ -31,9 +31,11 @@ from jax.sharding import Mesh
 from repro.core.manifest import DatasetManifest, ShardPlan, plan
 from repro.core.params import DepamParams
 from repro.distributed.partition import build_partition
+from repro.faults.plan import FaultPlan
+from repro.faults.retry import Retrier, RetryPolicy
 from . import engine
 from .features import EPOCH_WINDOW, FeatureSpec, Window, resolve_features
-from .sinks import AsyncSink, Sink, as_sink
+from .sinks import AsyncSink, Sink, StoreSink, as_sink
 from .sources import PrefetchSource, Source, as_source
 
 
@@ -55,6 +57,13 @@ class JobResult:
         kept rows); None when the job selects no ragged features or
         the sink streams.
 
+    ``quarantine`` is the bad-record accounting of a tolerant job
+    (``.tolerate(bad_records=N)``): ``{"budget", "records", "reasons"}``
+    — every quarantined record id with the fault that condemned it.
+    None unless the job tolerates bad records; the engine additionally
+    emits a RuntimeWarning whenever the set is non-empty, so masked
+    data never passes silently.
+
     ``result[name]`` looks up all four; a name present in more than
     one namespace raises instead of silently preferring one.
     """
@@ -66,6 +75,7 @@ class JobResult:
     n_records: int
     plan: ShardPlan
     events: dict | None = None
+    quarantine: dict | None = None
 
     def __getitem__(self, name: str):
         spaces = [("features", self.features or {}),
@@ -104,6 +114,9 @@ class SoundscapeJob:
         self._window: Window = EPOCH_WINDOW
         self._shards: int | None = None
         self._exec = engine.ExecOptions()
+        self._fault_plan: FaultPlan | None = None
+        self._retry: RetryPolicy | None = None
+        self._tolerate: int | None = None
 
     def features(self, *feats: str | FeatureSpec) -> "SoundscapeJob":
         """Select registered feature names and/or inline FeatureSpecs."""
@@ -256,6 +269,58 @@ class SoundscapeJob:
         self._exec = engine.ExecOptions()
         return self
 
+    def retry(self, attempts: int = 3, *, base_delay: float = 0.01,
+              max_delay: float = 1.0, jitter: float = 0.5,
+              seed: int = 0) -> "SoundscapeJob":
+        """Bounded retry for transient failures at the IO seams.
+
+        One shared budget covers source reads and sink writes/commits:
+        ``attempts`` total tries per operation, capped exponential
+        backoff from ``base_delay`` to ``max_delay`` with deterministic
+        ``jitter``.  Only :func:`repro.faults.is_retryable` failures are
+        retried; bad records propagate (or quarantine, see
+        :meth:`tolerate`).  After the budget, the job fails loudly with
+        a :class:`~repro.faults.RetryExhausted` naming the fault.
+        """
+        self._retry = RetryPolicy(attempts=attempts, base_delay=base_delay,
+                                  max_delay=max_delay, jitter=jitter,
+                                  seed=seed)
+        return self
+
+    def tolerate(self, *, bad_records: int) -> "SoundscapeJob":
+        """Opt into quarantining up to ``bad_records`` corrupt or
+        truncated records instead of failing the job.
+
+        Quarantined records are masked with reduction identities (their
+        per-record features keep the fill value, every aggregate
+        excludes them) and accounted loudly: the set rides each commit
+        next to the cursor (bitwise resume), ``JobResult.quarantine``
+        names every record and its fault, and a RuntimeWarning fires
+        whenever the set is non-empty.  One bad record past the budget
+        raises :class:`~repro.faults.QuarantineExceeded`.
+        """
+        if int(bad_records) < 0:
+            raise ValueError(
+                f"bad_records must be >= 0, got {bad_records}")
+        self._tolerate = int(bad_records)
+        return self
+
+    def inject(self, plan: FaultPlan | None) -> "SoundscapeJob":
+        """Thread a deterministic :class:`~repro.faults.FaultPlan`
+        through every seam of this job (chaos testing).
+
+        The plan's read faults wrap the source, sink faults wrap the
+        sink, and store crash points arm the
+        :class:`~repro.core.store.FeatureStore` commit protocol of a
+        store-backed sink.  Injection composes with :meth:`retry` /
+        :meth:`tolerate` — the acceptance property is that any injected
+        schedule either completes bitwise-identical to the fault-free
+        run or fails loudly naming the fault.  None removes a
+        previously-set plan.
+        """
+        self._fault_plan = plan
+        return self
+
     def _plan(self):
         """The job's step plan.
 
@@ -331,24 +396,59 @@ class SoundscapeJob:
         self._validate(specs, source)
         if self._payload_dtype is not None:
             source = source.with_payload(self._payload_dtype)
+
+        # fault machinery, innermost first, only when opted into — the
+        # default path composes zero extra layers (the overhead gate in
+        # benchmarks/fault_overhead.py holds it to the no-hooks line):
+        #   PrefetchSource(ResilientSource(FaultySource(inner)))
+        #   AsyncSink(ResilientSink(FaultySink(inner)))
+        faulted = self._fault_plan is not None
+        resilient = faulted or self._retry is not None \
+            or self._tolerate is not None
+        quarantine = retrier = None
+        if resilient:
+            from repro.faults.resilient import (FaultySink, FaultySource,
+                                                Quarantine, ResilientSink,
+                                                ResilientSource)
+            retrier = Retrier(self._retry or RetryPolicy())
+            if self._tolerate is not None:
+                quarantine = Quarantine(self._tolerate)
+            fp = self._fault_plan
+            inject_reads = faulted and any(
+                s.site == "source.fetch" for s in fp.specs)
+            inject_sink = faulted and any(
+                s.site in ("sink.write", "sink.commit") for s in fp.specs)
+            if not source.device_synth:
+                if inject_reads:
+                    source = FaultySource(source, fp)
+                source = ResilientSource(source, retrier=retrier,
+                                         quarantine=quarantine)
         if self._exec.prefetch_depth > 0 and not source.device_synth \
                 and not isinstance(source, PrefetchSource):
             source = PrefetchSource(source, depth=self._exec.prefetch_depth)
         sink: Sink = as_sink(self._sink)
+        if faulted and isinstance(sink, StoreSink):
+            # arm the store's commit-protocol crash points
+            sink.store.faults = self._fault_plan
+        if resilient:
+            if inject_sink:
+                sink = FaultySink(sink, self._fault_plan)
+            sink = ResilientSink(sink, retrier)
         if self._exec.inflight > 0 and not isinstance(sink, AsyncSink):
             sink = AsyncSink(sink, queue_size=self._exec.queue_size,
                              name=name)
         return engine.JobStepper(
             self._m, self._p, specs, source, sink, self._mesh,
             self._data_axes, self._plan(), self._use_kernels,
-            self._max_steps, self._exec, self._window, compiler=compiler)
+            self._max_steps, self._exec, self._window, compiler=compiler,
+            quarantine=quarantine)
 
     def run(self) -> JobResult:
-        features, epoch, windows, edges, n_records, events, pl_ = \
+        features, epoch, windows, edges, n_records, events, pl_, quar = \
             engine.drive(self._stepper())
         return JobResult(features=features, epoch=epoch, windows=windows,
                          window_edges=edges, n_records=n_records,
-                         events=events, plan=pl_)
+                         events=events, plan=pl_, quarantine=quar)
 
     def submit(self, service, *, name: str | None = None,
                weight: float = 1.0, quantum: int | None = None):

@@ -15,10 +15,14 @@ also survive the crash — bitwise.
 """
 from __future__ import annotations
 
+import io
 import json
 import os
+import zlib
 
 import numpy as np
+
+from repro.faults.errors import StoreIntegrityError
 
 from .manifest import DatasetManifest, ShardPlan
 from .params import DepamParams
@@ -26,8 +30,17 @@ from .tol import band_matrix as make_band_matrix
 
 
 class FeatureStore:
-    def __init__(self, root: str):
+    """``faults`` (a :class:`repro.faults.plan.FaultPlan`, tests only)
+    arms the two crash points of the commit protocol —
+    ``crash_after_sidecar`` / ``crash_before_commit`` — simulating
+    process death at the exact instants the write-fsync-rename dance is
+    designed to survive.  None (the default) compiles to two attribute
+    checks per commit: the production path carries no injection code.
+    """
+
+    def __init__(self, root: str, faults=None):
         self.root = root
+        self.faults = faults
         os.makedirs(root, exist_ok=True)
         self._arrays: dict[str, np.memmap] | None = None
         self._events: dict[str, dict] | None = None
@@ -129,6 +142,7 @@ class FeatureStore:
         (see above) — call before writing, never after."""
         st = self.load_cursor() or {}
         committed = st.get("events", {})
+        committed_crc = st.get("events_crc", {})
         self._events = {}
         for name, (n_records, n_cols) in layouts.items():
             cpath = self._event_counts_path(name)
@@ -149,11 +163,29 @@ class FeatureStore:
                 open(rpath, "xb").close()
             f = open(rpath, "r+b")
             want = rows_committed * n_cols * 4
+            # crash debris beyond the committed cursor is truncated away
+            # (the repair case: a half-appended step vanishes and the
+            # resumed job re-appends it exactly once)...
             f.truncate(want)
-            f.seek(want)
+            f.seek(0)
+            prefix = f.read(want)
+            crc = zlib.crc32(prefix)
+            expect = committed_crc.get(name)
+            # ...but damage WITHIN the committed prefix — a short file
+            # silently zero-extended by the truncate above, or flipped
+            # bits — is unrepairable and must never resume silently
+            if expect is not None and crc != expect:
+                f.close()
+                raise StoreIntegrityError(
+                    f"event log {rpath!r} failed CRC32 over its "
+                    f"committed {rows_committed} rows (expected "
+                    f"{expect:#010x}, got {crc:#010x}): the committed "
+                    f"prefix is torn or corrupt; the store cannot "
+                    f"resume from it — restore the file or start a "
+                    f"fresh store directory", path=rpath)
             self._events[name] = {"counts": counts, "file": f,
                                   "n_cols": n_cols,
-                                  "rows": rows_committed}
+                                  "rows": rows_committed, "crc": crc}
 
     def append_events(self, name: str, indices: np.ndarray,
                       counts: np.ndarray, rows: np.ndarray) -> None:
@@ -161,8 +193,9 @@ class FeatureStore:
         rows, appended at the current end of the log."""
         ev = self._events[name]
         ev["counts"][indices] = counts
-        ev["file"].write(
-            np.ascontiguousarray(rows, np.float32).tobytes())
+        data = np.ascontiguousarray(rows, np.float32).tobytes()
+        ev["file"].write(data)
+        ev["crc"] = zlib.crc32(data, ev["crc"])
         ev["rows"] += len(rows)
 
     def read_events(self, name: str) -> tuple[np.ndarray, np.ndarray]:
@@ -254,6 +287,12 @@ class FeatureStore:
                 os.fsync(ev["file"].fileno())
             state["events"] = {name: ev["rows"]
                                for name, ev in self._events.items()}
+            # running CRC32 of each log's committed prefix; open_events
+            # re-verifies it, so a torn tail *within* the committed
+            # range trips loudly (a tail BEYOND the cursor is normal
+            # crash debris — truncated away on open, the repair case)
+            state["events_crc"] = {name: ev["crc"]
+                                   for name, ev in self._events.items()}
         else:
             # a commit from a job without open logs must not orphan an
             # existing log's cursor — later opens would truncate to 0
@@ -261,20 +300,39 @@ class FeatureStore:
             prev = self.load_cursor()
             if prev and "events" in prev:
                 state["events"] = prev["events"]
+                if "events_crc" in prev:
+                    state["events_crc"] = prev["events_crc"]
         if agg:
+            # serialize in memory first so the CRC32 committed in the
+            # cursor covers exactly the bytes renamed in — load_agg
+            # verifies it before deserializing, so a torn or bit-rotted
+            # sidecar fails loudly by name instead of resuming garbage
+            buf = io.BytesIO()
+            np.savez(buf, **{k: np.asarray(v) for k, v in agg.items()})
+            payload = buf.getvalue()
             fname = f"agg-{cursor}.npz"
             tmp = os.path.join(self.root, fname + ".tmp")
             with open(tmp, "wb") as f:
-                np.savez(f, **{k: np.asarray(v) for k, v in agg.items()})
+                f.write(payload)
                 f.flush()
                 os.fsync(f.fileno())
             os.replace(tmp, os.path.join(self.root, fname))
             state["agg_file"] = fname
+            state["agg_crc"] = zlib.crc32(payload)
+        if self.faults is not None:
+            # the sidecar is durable, the cursor still names its
+            # predecessor: resume must use the OLD pair (the new
+            # sidecar is an orphan, GC'd by the next commit)
+            self.faults.crash("crash_after_sidecar")
         tmp = self._cursor_path() + ".tmp"
         with open(tmp, "w") as f:
             json.dump(state, f)
             f.flush()
             os.fsync(f.fileno())
+        if self.faults is not None:
+            # cursor tmp is durable but not renamed in: resume must
+            # ignore it entirely
+            self.faults.crash("crash_before_commit")
         os.replace(tmp, self._cursor_path())      # atomic commit
         for name in os.listdir(self.root):        # GC stale sidecars
             if name.startswith("agg-") and name != state.get("agg_file") \
@@ -309,7 +367,21 @@ class FeatureStore:
         if st is None:
             return None
         if "agg_file" in st:
-            with np.load(os.path.join(self.root, st["agg_file"])) as z:
+            path = os.path.join(self.root, st["agg_file"])
+            with open(path, "rb") as f:
+                payload = f.read()
+            if "agg_crc" in st:
+                crc = zlib.crc32(payload)
+                if crc != int(st["agg_crc"]):
+                    raise StoreIntegrityError(
+                        f"aggregate sidecar {path!r} failed CRC32 "
+                        f"(cursor expects {int(st['agg_crc']):#010x}, "
+                        f"file has {crc:#010x}): the committed carry "
+                        f"state is torn or corrupt; resuming it would "
+                        f"silently poison every later aggregate — "
+                        f"restore the file or start a fresh store "
+                        f"directory", path=path)
+            with np.load(io.BytesIO(payload)) as z:
                 agg = {k: np.asarray(z[k], np.float64) for k in z.files}
         elif "agg" in st:
             agg = {k: np.asarray(v, np.float64)

@@ -37,6 +37,7 @@ from typing import Callable
 import numpy as np
 
 from repro.core.manifest import ShardPlan
+from repro.faults.errors import is_retryable
 
 
 class SpeculativeLoader:
@@ -45,10 +46,16 @@ class SpeculativeLoader:
                  overdecompose: int = 4, depth: int = 2,
                  speculate_factor: float = 4.0,
                  min_speculate_sec: float = 0.05,
-                 boundaries: np.ndarray | None = None):
+                 boundaries: np.ndarray | None = None,
+                 retries: int = 1):
         self.reader = reader
         self.plan = plan
         self.overdecompose = max(1, overdecompose)
+        # fresh re-submissions allowed per read task after EVERY copy
+        # (original + speculative duplicate) failed with a retryable
+        # error — Spark's task.maxFailures at the read-task level.
+        # Non-retryable failures propagate immediately regardless.
+        self.retries = max(0, retries)
         # sorted global record offsets at which a new file/block begins
         # (a manifest's ``file_offsets``); when given, read tasks split
         # along these boundaries — the HDFS block-locality analogue
@@ -67,6 +74,7 @@ class SpeculativeLoader:
             max_workers=self.depth, thread_name_prefix="SpecLoader-step")
         self.durations: list[float] = []
         self.speculated = 0
+        self.read_retries = 0
         self._lock = threading.Lock()
 
     # -- one read task (leaf work, runs on read_pool) -------------------
@@ -111,6 +119,38 @@ class SpeculativeLoader:
                 parts.append(run[i:i + target])
         return [p for p in parts if p.size]
 
+    def _recover(self, first: cf.Future, part: np.ndarray) -> np.ndarray:
+        """Ride out a straggling or transiently-failing read task.
+
+        Launches a duplicate of ``first`` and takes whichever copy
+        SUCCEEDS first.  FIRST_COMPLETED can return a copy that *raised*
+        (and ``done`` may hold both copies), so keep waiting while any
+        copy is still running.  Only when every copy has failed does the
+        bounded retry budget kick in: a retryable last failure buys up
+        to ``retries`` fresh submissions (reads are pure, so re-reading
+        is always sound); then — or immediately for non-retryable
+        failures — the error is re-raised, naming its fault.
+        """
+        waiting = {first, self.read_pool.submit(self._timed_read, part)}
+        retries_left = self.retries
+        while True:
+            done, waiting = cf.wait(waiting,
+                                    return_when=cf.FIRST_COMPLETED)
+            ok = next((f for f in done if not f.cancelled()
+                       and f.exception() is None), None)
+            if ok is not None:
+                return ok.result()
+            if waiting:
+                continue
+            failed = next(f for f in done if not f.cancelled())
+            if retries_left > 0 and is_retryable(failed.exception()):
+                retries_left -= 1
+                with self._lock:
+                    self.read_retries += 1
+                waiting = {self.read_pool.submit(self._timed_read, part)}
+                continue
+            failed.result()             # every copy failed: re-raise
+
     # -- step assembly (runs on step_pool; blocks only on read_pool) ----
     def _load_step(self, step: int) -> tuple[np.ndarray, np.ndarray]:
         idx = self.plan.step_indices(step)
@@ -133,27 +173,18 @@ class SpeculativeLoader:
                 # cf.TimeoutError is NOT the builtin TimeoutError until
                 # Python 3.11; catch both spellings.
                 except (cf.TimeoutError, TimeoutError):
-                    # straggler: launch a duplicate, first SUCCESS wins.
-                    # FIRST_COMPLETED can return a copy that *raised*
-                    # (and `done` may hold both copies), so keep waiting
-                    # while any copy is still running and only raise
-                    # once every copy has failed.
+                    # straggler: launch a duplicate, first SUCCESS wins
                     with self._lock:
                         self.speculated += 1
-                    backup = self.read_pool.submit(self._timed_read,
-                                                   parts[i])
-                    waiting = {fut, backup}
-                    while True:
-                        done, waiting = cf.wait(
-                            waiting, return_when=cf.FIRST_COMPLETED)
-                        ok = next((f for f in done
-                                   if not f.cancelled()
-                                   and f.exception() is None), None)
-                        if ok is not None:
-                            results[i] = ok.result()
-                            break
-                        if not waiting:     # every copy failed
-                            next(iter(done)).result()   # re-raise
+                    results[i] = self._recover(fut, parts[i])
+                except BaseException as e:      # noqa: BLE001
+                    # a copy FAILED (no timeout).  Transient read errors
+                    # take the same recovery path as stragglers — a
+                    # fresh copy may succeed (flaky disk, not bad data);
+                    # everything else propagates untouched.
+                    if not is_retryable(e):
+                        raise
+                    results[i] = self._recover(fut, parts[i])
         # dtype passes through untouched (int16 payloads stay int16)
         out = np.concatenate([results[i] for i in range(len(parts))], axis=0)
         return out.reshape(*idx.shape, -1), self.plan.step_mask(step)
@@ -194,7 +225,9 @@ class SpeculativeLoader:
             d = (np.asarray(self.durations) if self.durations
                  else np.zeros(1))
             spec = self.speculated
+            retried = self.read_retries
         return {"tasks": int(d.size), "speculated": spec,
+                "read_retries": retried,
                 "median_s": float(np.median(d)),
                 "p99_s": float(np.quantile(d, 0.99))}
 

@@ -44,6 +44,7 @@ import numpy as np
 
 from repro.core.manifest import DatasetManifest
 from repro.core.params import PCM_DECODE_SCALE
+from repro.faults.errors import TruncatedRecordError
 
 
 def write_dataset(root: str, m: DatasetManifest, gen=None) -> list[str]:
@@ -205,14 +206,19 @@ def _decode_pcm(raw: bytes, want_frames: int, path: str,
 
     ``readframes`` silently returns short at EOF; with variable-length
     files that would mean silently analyzing a zero-padded tail, so a
-    short read is an error naming the file and offset instead.
+    short read is an error naming the file and offset instead.  The
+    error is a :class:`~repro.faults.errors.TruncatedRecordError` (a
+    ValueError subclass): data-attributable, so the fault machinery
+    quarantines the record under ``.tolerate(bad_records=N)`` instead
+    of retrying a read that can never succeed.
     """
     pcm = np.frombuffer(raw, dtype="<i2")
     if pcm.size != want_frames:
-        raise ValueError(
+        raise TruncatedRecordError(
             f"truncated read from {path!r}: wanted {want_frames} frames "
             f"starting at record {at_record}, got {pcm.size} — the file "
-            f"is shorter than the manifest says (re-run scan_dataset?)")
+            f"is shorter than the manifest says (re-run scan_dataset?)",
+            record=at_record)
     return pcm
 
 

@@ -9,6 +9,7 @@ batch wav corpora.
 """
 from .compile_cache import CompileCache
 from .live import LiveSource, RingOverrun
+from .restart import RestartPolicy
 from .scheduler import DeficitRoundRobin, RoundRobin, Scheduler
 from .service import SoundscapeService, TenantHandle
 
@@ -16,6 +17,7 @@ __all__ = [
     "CompileCache",
     "DeficitRoundRobin",
     "LiveSource",
+    "RestartPolicy",
     "RingOverrun",
     "RoundRobin",
     "Scheduler",

@@ -42,6 +42,7 @@ import numpy as np
 from repro.api.sources import Source
 from repro.core.manifest import DatasetManifest
 from repro.core.params import DepamParams, PCM_DECODE_SCALE
+from repro.faults.errors import StreamStall
 
 
 class RingOverrun(RuntimeError):
@@ -81,6 +82,7 @@ class LiveSource(Source):
         self._consumed = int(start)  # records < this have been fetched
         self._total: int | None = None   # set by end()
         self._bound: int | None = None   # manifest n_records after bind
+        self._auto_ended = False         # close() ended it, not end()
         self._cond = threading.Condition()
 
     # -- producer side --------------------------------------------------
@@ -172,7 +174,15 @@ class LiveSource(Source):
 
     # -- Source protocol (consumer side) --------------------------------
     def bind(self, m: DatasetManifest, p: DepamParams) -> "LiveSource":
-        self._bound = m.n_records
+        with self._cond:
+            if self._auto_ended:
+                # the previous consumer's close() ended the stream as
+                # crash/teardown debris, not the producer's end(); a
+                # re-admitted (restarted) tenant re-binds the same ring
+                # and keeps consuming where the cursor left off
+                self._total = None
+                self._auto_ended = False
+            self._bound = m.n_records
         return self
 
     def with_payload(self, dtype: str) -> "LiveSource":
@@ -227,7 +237,11 @@ class LiveSource(Source):
 
             if not self._cond.wait_for(satisfied,
                                        timeout=self.fetch_timeout):
-                raise TimeoutError(
+                # StreamStall (a TimeoutError) is RETRYABLE AT THE
+                # TENANT LEVEL: a service with a RestartPolicy parks the
+                # tenant and re-admits it from its committed cursor,
+                # instead of one starved producer killing the job
+                raise StreamStall(
                     f"live fetch starved: waited {self.fetch_timeout}s "
                     f"for record "
                     f"{int(flat[~self._never_arrives(flat)].max())} "
@@ -263,4 +277,5 @@ class LiveSource(Source):
         with self._cond:
             if self._total is None:
                 self._total = self._pushed
+                self._auto_ended = True
             self._cond.notify_all()

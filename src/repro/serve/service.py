@@ -44,10 +44,12 @@ from __future__ import annotations
 
 import threading
 import time
+import warnings
 
 from repro.api.job import JobResult
 
 from .compile_cache import CompileCache
+from .restart import RestartPolicy
 from .scheduler import RoundRobin, Scheduler
 
 
@@ -55,23 +57,35 @@ class TenantHandle:
     """One submitted job inside a service: identity, scheduling knobs,
     and the observable outcome.
 
-    ``state`` walks ``queued -> running -> done | failed``; ``result()``
-    blocks until the tenant leaves the running states, then returns its
+    ``state`` walks ``queued -> running -> done | failed``; under a
+    service :class:`~repro.serve.restart.RestartPolicy` a transiently
+    failed tenant detours through ``parked`` (waiting out its restart
+    backoff) back to ``queued``.  ``result()`` blocks until the tenant
+    leaves the running states, then returns its
     :class:`~repro.api.job.JobResult` (or raises the tenant's error).
     ``step_seconds`` records the wall-clock of every dispatched step —
     the service's per-tenant latency observability (the serve benchmark
-    reports its p50/p95).
+    reports its p50/p95).  ``restarts`` counts re-admissions,
+    ``last_error`` keeps the most recent healed failure, and
+    ``close_error`` any secondary teardown failure (also chained onto
+    the primary error's ``__context__``).
     """
 
-    def __init__(self, name: str, stepper, weight: float, quantum: int):
+    def __init__(self, name: str, stepper, weight: float, quantum: int,
+                 job=None):
         self.name = name
         self.stepper = stepper
+        self.job = job            # retained for restart re-admission
         self.weight = weight
         self.quantum = quantum
         self.state = "queued"
         self.error: BaseException | None = None
+        self.last_error: BaseException | None = None
+        self.close_error: BaseException | None = None
+        self.restarts = 0
         self.steps_run = 0
         self.step_seconds: list[float] = []
+        self._retry_at: float | None = None
         self._result: JobResult | None = None
         self._finished = threading.Event()
 
@@ -107,18 +121,25 @@ class SoundscapeService:
     may run for a tenant (its starvation bound); ``scheduler`` the
     fairness policy; ``cache`` the shared compiled-step cache.
     ``idle_wait`` is the sleep between scheduling passes when every
-    active tenant is blocked on a starved live source.
+    active tenant is blocked on a starved live source.  ``restart``
+    (a :class:`~repro.serve.restart.RestartPolicy`) opts into
+    self-healing: tenants that die of transient causes are parked and
+    re-admitted from their last committed cursor instead of failed;
+    ``None`` (the default) keeps fail-fast behaviour.
     """
 
     def __init__(self, scheduler: Scheduler | None = None,
                  quantum: int = 2, cache: CompileCache | None = None,
-                 idle_wait: float = 0.002):
+                 idle_wait: float = 0.002,
+                 restart: RestartPolicy | None = None):
         if quantum < 1:
             raise ValueError(f"quantum must be >= 1, got {quantum}")
         self.scheduler = scheduler or RoundRobin()
         self.quantum = quantum
         self.cache = cache or CompileCache()
         self.idle_wait = idle_wait
+        self.restart = restart
+        self.restarts = 0         # total re-admissions, all tenants
         self.trace: list[tuple[str, int]] = []   # (tenant, steps) turns
         self._tenants: dict[str, TenantHandle] = {}
         self._lock = threading.RLock()
@@ -138,7 +159,7 @@ class SoundscapeService:
                 raise ValueError(f"tenant {name!r} already submitted")
             stepper = job._stepper(compiler=self.cache, name=name)
             handle = TenantHandle(name, stepper, weight,
-                                  quantum or self.quantum)
+                                  quantum or self.quantum, job=job)
             self.scheduler.add(name, weight)
             self._tenants[name] = handle
             return handle
@@ -158,8 +179,17 @@ class SoundscapeService:
             active = [t for t in self._tenants.values() if not t.done]
             if not active:
                 return "done"
-            runnable = [t for t in active
-                        if t.stepper.poll() != "pending"]
+            now = time.monotonic()
+            runnable = []
+            for t in active:
+                if t.state == "parked":
+                    if now < t._retry_at:
+                        continue          # still waiting out backoff
+                    self._readmit(t)
+                    if t.done:
+                        continue          # re-admission itself failed
+                if t.stepper.poll() != "pending":
+                    runnable.append(t)
             if not runnable:
                 return "idle"
             name = self.scheduler.pick([t.name for t in runnable])
@@ -170,9 +200,33 @@ class SoundscapeService:
             self.trace.append((tenant.name, ran))
         return "ran"
 
+    def _readmit(self, tenant: TenantHandle) -> None:
+        """Self-healing re-admission: build a fresh stepper from the
+        tenant's retained job — it resumes from the last committed
+        cursor (carry, quarantine, and event tails ride the commit) so
+        the healed run is bitwise-identical to an uninterrupted one.
+        Called under the lock, once the parked backoff has elapsed."""
+        tenant.last_error, tenant.error = tenant.error, None
+        try:
+            tenant.stepper = tenant.job._stepper(
+                compiler=self.cache, name=tenant.name)
+        except BaseException as e:             # noqa: BLE001
+            tenant.error = e
+            tenant.state = "failed"
+            tenant._finished.set()
+            if isinstance(e, (KeyboardInterrupt, SystemExit)):
+                raise
+            return
+        tenant.restarts += 1
+        self.restarts += 1
+        tenant.state = "queued"
+        tenant._retry_at = None
+
     def _run_quantum(self, tenant: TenantHandle) -> int:
         """Drive one tenant for up to ``tenant.quantum`` steps; handle
-        start, graceful finish, and failure isolation."""
+        start, graceful finish, and failure isolation (park-for-restart
+        when the service has a RestartPolicy and the failure is
+        transient; terminal ``failed`` otherwise)."""
         ran = 0
         stepper = tenant.stepper
         try:
@@ -193,22 +247,56 @@ class SoundscapeService:
                 tenant._result = JobResult(
                     features=out[0], epoch=out[1], windows=out[2],
                     window_edges=out[3], n_records=out[4],
-                    events=out[5], plan=out[6])
+                    events=out[5], plan=out[6], quarantine=out[7])
                 tenant.state = "done"
+                tenant.error = None
                 tenant._finished.set()
         except BaseException as e:             # noqa: BLE001
+            fatal = isinstance(e, (KeyboardInterrupt, SystemExit))
             tenant.error = e
-            tenant.state = "failed"
-            tenant._finished.set()
-            try:
-                stepper.close()
-            except BaseException:              # noqa: BLE001
-                pass      # the original failure is what the user sees
-            if isinstance(e, (KeyboardInterrupt, SystemExit)):
+            if (not fatal and self.restart is not None
+                    and self.restart.restartable(e)
+                    and tenant.restarts < self.restart.restarts):
+                tenant.state = "parked"
+                tenant._retry_at = time.monotonic() \
+                    + self.restart.delay(tenant.restarts)
+            else:
+                tenant.state = "failed"
+                tenant._finished.set()
+            self._close_failed(tenant, e)
+            if fatal:
                 raise
         finally:
             tenant.steps_run += ran
         return ran
+
+    @staticmethod
+    def _close_failed(tenant: TenantHandle, error: BaseException) -> None:
+        """Release a failed tenant's resources.  A secondary failure
+        during close must not vanish: it is chained onto the primary
+        error's ``__context__`` (the traceback shows both), kept on
+        ``tenant.close_error``, and warned about."""
+        try:
+            tenant.stepper.close()
+        except BaseException as ce:            # noqa: BLE001
+            if isinstance(ce, (KeyboardInterrupt, SystemExit)):
+                raise
+            tenant.close_error = ce
+            # ce was raised while handling `error`, so its implicit
+            # context already points back at it — break that link
+            # before threading ce onto the END of error's own chain,
+            # or the chain becomes a cycle
+            ce.__context__ = None
+            ce.__cause__ = None
+            tail = error
+            while tail.__context__ is not None and tail.__context__ is not ce:
+                tail = tail.__context__
+            if tail.__context__ is None:
+                tail.__context__ = ce
+            warnings.warn(
+                f"tenant {tenant.name!r} also failed to close cleanly "
+                f"after its primary error: {ce!r}", RuntimeWarning,
+                stacklevel=3)
 
     def run(self, timeout: float | None = None) -> dict[str, TenantHandle]:
         """Drive every submitted tenant to completion (blocking); live
@@ -267,7 +355,7 @@ class SoundscapeService:
                 name: {"state": t.state, "steps": t.steps_run,
                        "records": (t.records_done if t.state != "queued"
                                    else 0),
-                       "weight": t.weight}
+                       "weight": t.weight, "restarts": t.restarts}
                 for name, t in self._tenants.items()}
             return {"compile": self.cache.stats(), "tenants": tenants,
-                    "turns": len(self.trace)}
+                    "turns": len(self.trace), "restarts": self.restarts}
