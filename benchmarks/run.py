@@ -1,12 +1,13 @@
 """Benchmark aggregator — one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV and writes the consolidated
-perf-trajectory snapshot ``BENCH_PR9.json`` at the repo root: one entry
-per benchmark with µs/call plus every derived metric (records/s,
+perf-trajectory snapshot ``BENCH_PR10.json`` at the repo root: one
+entry per benchmark with µs/call plus every derived metric (records/s,
 host→device bytes/record, events/s, file opens/step, step-latency
-percentiles, compile-cache hits, fault-free overhead, speedups...), so
-future PRs can diff against a recorded baseline instead of re-deriving
-one (``BENCH_PR8.json`` remains as the previous PR's recorded numbers).
+percentiles, compile-cache hits, fault-free overhead, labeled-sink
+overhead, speedups...), so future PRs can diff against a recorded
+baseline instead of re-deriving one (``BENCH_PR9.json`` remains as the
+previous PR's recorded numbers).
 Snapshots are keyed by config (``fast`` vs ``full``) and merged into
 the existing file, so a ``--fast`` dev run never clobbers full-config
 baseline numbers with non-comparable ones.
@@ -53,8 +54,8 @@ def main() -> None:
 
     from benchmarks import async_pipeline, events, fault_overhead, \
         fig3_1_single_node, fig3_2_speedup, job_pipeline, \
-        serve_multitenant, table2_1_param_sets, roofline_report, \
-        transfer, wav_io, windowed_agg
+        serve_multitenant, sink_formats, table2_1_param_sets, \
+        roofline_report, transfer, wav_io, windowed_agg
 
     rows += fig3_1_single_node.run(
         workload_records=(4, 8) if fast else (4, 8, 16))
@@ -90,12 +91,15 @@ def main() -> None:
         iters=1 if fast else 2)
     rows += fault_overhead.run(n_records=32 if fast else 64,
                                iters=5 if fast else 8)
+    rows += sink_formats.run(n_records=16 if fast else 64,
+                             chunk=4 if fast else 8,
+                             iters=1 if fast else 3)
     rows += roofline_report.run()
 
     print("\n".join(rows))
 
     out_path = os.path.abspath(os.path.join(
-        os.path.dirname(__file__), os.pardir, "BENCH_PR9.json"))
+        os.path.dirname(__file__), os.pardir, "BENCH_PR10.json"))
     snapshot: dict = {}
     if os.path.exists(out_path):
         try:

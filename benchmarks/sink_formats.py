@@ -1,0 +1,110 @@
+"""Labeled-sink overhead: FeatureStore vs ZarrSink vs NetCDFSink.
+
+The interoperable outputs (PR 10) must not tax the write path: the
+ZarrSink re-chunks every committed step into labeled zarr chunks
+(tmp+fsync+rename per chunk), the NetCDFSink runs the raw store and
+materializes one labeled ``.nc`` at completion.  This benchmark drives
+the SAME job (timestamped manifest, dense + windowed features) into all
+three sinks and reports per-record wall time, records/s, and bytes on
+disk — plus the overhead ratio against the raw store, which is the
+number docs/api.md quotes.  Results are asserted bitwise-identical
+across sinks before any timing is trusted.
+
+  PYTHONPATH=src:. python benchmarks/sink_formats.py [--smoke]
+"""
+from __future__ import annotations
+
+import os
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro import api
+from repro.core.manifest import DatasetManifest
+from repro.core.params import DepamParams
+
+T0 = 1275566400.0                       # 2010-06-03T12:00:00Z
+
+
+def _du(root: str) -> int:
+    """Bytes on disk under a directory tree (or of a single file)."""
+    if os.path.isfile(root):
+        return os.path.getsize(root)
+    total = 0
+    for dirpath, _, files in os.walk(root):
+        for f in files:
+            total += os.path.getsize(os.path.join(dirpath, f))
+    return total
+
+
+def run(n_records=64, record_sec=0.25, chunk=8, iters=3,
+        max_overhead=None):
+    p = DepamParams(nfft=256, window_size=256, window_overlap=128,
+                    record_size_sec=record_sec)
+    per_file = n_records // 2
+    span = per_file * p.record_size / p.fs
+    m = DatasetManifest(n_files=2, records_per_file=per_file,
+                        record_size=p.record_size, fs=p.fs, seed=3,
+                        file_starts=(T0, T0 + span))
+
+    def job():
+        return (api.job(m, p).features("welch", "spl", "ltsa")
+                .chunk(chunk).window(records=chunk))
+
+    def sweep(make_sink):
+        best, nbytes, result = float("inf"), 0, None
+        for _ in range(iters):
+            with tempfile.TemporaryDirectory() as d:
+                t0 = time.perf_counter()
+                result = job().to(make_sink(d)).run()
+                best = min(best, time.perf_counter() - t0)
+                nbytes = _du(d)
+        return best, nbytes, result
+
+    t_st, b_st, r_st = sweep(lambda d: os.path.join(d, "store"))
+    t_za, b_za, r_za = sweep(
+        lambda d: api.ZarrSink(os.path.join(d, "out.zarr"),
+                               chunk_records=chunk))
+    t_nc, b_nc, r_nc = sweep(
+        lambda d: api.NetCDFSink(os.path.join(d, "out.nc")))
+
+    # the labeled outputs ARE the store's numbers — never trade
+    # correctness for layout
+    for name, r in (("zarr", r_za), ("netcdf", r_nc)):
+        for k in ("welch", "spl"):
+            assert np.array_equal(r[k], r_st[k]), \
+                f"{name} sink diverged from the store on {k!r}"
+        assert np.array_equal(r.windows["ltsa"], r_st.windows["ltsa"]), \
+            f"{name} sink diverged from the store on windowed ltsa"
+
+    ov_za, ov_nc = t_za / t_st, t_nc / t_st
+    if max_overhead is not None:
+        assert ov_za <= max_overhead and ov_nc <= max_overhead, \
+            f"labeled-sink overhead regressed: zarr {ov_za:.2f}x / " \
+            f"netcdf {ov_nc:.2f}x vs store (> {max_overhead}x)"
+    return [
+        common.row("sink_formats/store", t_st / n_records * 1e6,
+                   f"records_per_s={n_records / t_st:.0f};"
+                   f"disk_bytes={b_st}"),
+        common.row("sink_formats/zarr", t_za / n_records * 1e6,
+                   f"records_per_s={n_records / t_za:.0f};"
+                   f"disk_bytes={b_za};overhead={ov_za:.2f}x;"
+                   f"bitwise_equal=yes"),
+        common.row("sink_formats/netcdf", t_nc / n_records * 1e6,
+                   f"records_per_s={n_records / t_nc:.0f};"
+                   f"disk_bytes={b_nc};overhead={ov_nc:.2f}x;"
+                   f"bitwise_equal=yes"),
+    ]
+
+
+if __name__ == "__main__":
+    if "--smoke" in sys.argv:
+        # CI gate: tiny run, bitwise identity always enforced; the
+        # wall-clock gate stays loose for noisy shared runners
+        rows = run(n_records=16, iters=1, chunk=4, max_overhead=20.0)
+    else:
+        rows = run(max_overhead=5.0)
+    print("\n".join(rows))

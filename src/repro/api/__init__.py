@@ -53,8 +53,11 @@ from .features import (FeatureContext, FeatureSpec, Reduction, StateField,
 from .sources import (PrefetchSource, ReaderSource, Source, SynthSource,
                       WavSource, as_source)
 from repro.data.wavio import scan_dataset
+from repro.meta import (Instrument, TimestampParseError, format_utc,
+                        parse_timestamp, timestamps_for)
 from .sinks import (AsyncSink, CallbackSink, EventLog, MemorySink, Sink,
                     StoreSink, as_sink)
+from .formats import NetCDFSink, ZarrSink, read_zarr_array
 from .job import JobResult, SoundscapeJob, job
 from repro.faults import FaultPlan, FaultSpec, RetryPolicy
 
@@ -70,6 +73,9 @@ __all__ = [
     "as_source", "scan_dataset",
     "Sink", "MemorySink", "StoreSink", "CallbackSink", "AsyncSink",
     "EventLog", "as_sink",
+    "ZarrSink", "NetCDFSink", "read_zarr_array",
+    "Instrument", "TimestampParseError", "format_utc",
+    "parse_timestamp", "timestamps_for",
     "SoundscapeJob", "JobResult", "job",
     "FaultPlan", "FaultSpec", "RetryPolicy",
 ]

@@ -473,9 +473,13 @@ class JobStepper:
                  options: ExecOptions | None = None,
                  window: Window | None = None,
                  compiler: Compiler | None = None,
-                 quarantine=None):
+                 quarantine=None, instrument=None):
         self.m = m
         self.p = p
+        # calibration provenance (repro.meta.Instrument or None): handed
+        # to the sink before open, so resumable sinks commit it with the
+        # cursor and labeled sinks stamp it on output attrs
+        self.instrument = instrument
         self.specs = tuple(specs)
         self.source = source
         self.sink = sink
@@ -551,11 +555,16 @@ class JobStepper:
         self._agg_fn = self.compiler.reduce(
             bindings, self.mesh, self.data_axes, donate_carry)
 
+        self.sink.set_instrument(self.instrument)
         self.sink.open(m, p, self._shapes, pl_)
         if self._windowed:
             self.sink.open_windows({
                 b.out_name: (b.n_windows,) + tuple(b.red.out_shape(m, p))
                 for b in self._windowed})
+            # labeled sinks derive per-window time coordinates from
+            # these record-offset edges (manifest.record_times)
+            self.sink.open_window_edges(
+                {name: e.copy() for name, e in self._edges.items()})
         if self._ragged:
             # capacity is a params knob (it keys the compiled program),
             # so every ragged feature of a job shares p.event_capacity
@@ -882,7 +891,7 @@ def run_job(m: DatasetManifest, p: DepamParams, specs: list[FeatureSpec],
             data_axes: tuple[str, ...], pl_: ShardPlan,
             use_kernels: bool, max_steps: int | None,
             options: ExecOptions | None = None,
-            window: Window | None = None):
+            window: Window | None = None, instrument=None):
     """Drive the job over plan ``pl_`` to completion; resumable when
     the sink is.
 
@@ -897,7 +906,8 @@ def run_job(m: DatasetManifest, p: DepamParams, specs: list[FeatureSpec],
     any step raises mid-stream.
     """
     stepper = JobStepper(m, p, specs, source, sink, mesh, data_axes, pl_,
-                         use_kernels, max_steps, options, window)
+                         use_kernels, max_steps, options, window,
+                         instrument=instrument)
     return drive(stepper)
 
 

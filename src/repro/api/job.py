@@ -23,6 +23,7 @@ the sharded plan to completion (resuming if the sink supports it).
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 
 import numpy as np
@@ -33,10 +34,41 @@ from repro.core.params import DepamParams
 from repro.distributed.partition import build_partition
 from repro.faults.plan import FaultPlan
 from repro.faults.retry import Retrier, RetryPolicy
+from repro.meta.instrument import Instrument
 from . import engine
 from .features import EPOCH_WINDOW, FeatureSpec, Window, resolve_features
 from .sinks import AsyncSink, Sink, StoreSink, as_sink
-from .sources import PrefetchSource, Source, as_source
+from .sources import PrefetchSource, Source, WavSource, as_source
+
+
+def _calibrated(source: Source, instrument: Instrument) -> Source:
+    """Derive the per-file calibration gain of a wav-fed source from the
+    instrument model (copy, never mutate — sources are reusable).
+
+    Only wav sources have a calibration seam; an instrument on a
+    synthesized or raw-callback source would silently do nothing, so it
+    is refused by name instead.
+    """
+    if isinstance(source, WavSource):
+        if source.calibration is not None:
+            raise ValueError(
+                ".instrument(...) conflicts with the explicit "
+                "calibration already set on the WavSource — the gain "
+                "must have exactly one source of truth; drop one of "
+                "the two")
+        new = copy.copy(source)
+        new.calibration = instrument    # wavio derives the linear gain
+        new._reader = None              # bind() attaches a fresh reader
+        return new
+    if isinstance(source, PrefetchSource):
+        new = copy.copy(source)
+        new.inner = _calibrated(source.inner, instrument)
+        return new
+    raise ValueError(
+        f".instrument(...) needs a wav-fed source to apply its "
+        f"calibration gain to, got {type(source).__name__}; feed the "
+        f"job from a wav directory (.source(path)) or drop the "
+        f"instrument")
 
 
 @dataclasses.dataclass
@@ -117,6 +149,7 @@ class SoundscapeJob:
         self._fault_plan: FaultPlan | None = None
         self._retry: RetryPolicy | None = None
         self._tolerate: int | None = None
+        self._instrument: Instrument | None = None
 
     def features(self, *feats: str | FeatureSpec) -> "SoundscapeJob":
         """Select registered feature names and/or inline FeatureSpecs."""
@@ -142,6 +175,22 @@ class SoundscapeJob:
         """Where results go: Sink, FeatureStore, store path, or a
         streaming callback ``fn(step, indices, values)``."""
         self._sink = sink
+        return self
+
+    def instrument(self, inst: Instrument | None) -> "SoundscapeJob":
+        """Calibrate the job with a recording-chain model
+        (:class:`repro.meta.Instrument`): the wav source's per-file
+        gain is *derived* from hydrophone sensitivity + preamp gain +
+        ADC peak voltage (the pypam/pyhydrophone model), resumable
+        sinks commit the instrument next to the cursor (a resumed run
+        under a changed calibration refuses loudly), and labeled sinks
+        stamp it on the output attrs.  None removes a previously-set
+        instrument."""
+        if inst is not None and not isinstance(inst, Instrument):
+            raise TypeError(
+                f".instrument(...) takes a repro.meta.Instrument or "
+                f"None, got {type(inst).__name__}")
+        self._instrument = inst
         return self
 
     def shards(self, n: int | None) -> "SoundscapeJob":
@@ -393,6 +442,8 @@ class SoundscapeJob:
         shared compile cache as ``compiler``)."""
         specs = resolve_features(self._features)
         source: Source = as_source(self._source)
+        if self._instrument is not None:
+            source = _calibrated(source, self._instrument)
         self._validate(specs, source)
         if self._payload_dtype is not None:
             source = source.with_payload(self._payload_dtype)
@@ -441,7 +492,7 @@ class SoundscapeJob:
             self._m, self._p, specs, source, sink, self._mesh,
             self._data_axes, self._plan(), self._use_kernels,
             self._max_steps, self._exec, self._window, compiler=compiler,
-            quarantine=quarantine)
+            quarantine=quarantine, instrument=self._instrument)
 
     def run(self) -> JobResult:
         features, epoch, windows, edges, n_records, events, pl_, quar = \

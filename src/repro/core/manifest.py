@@ -47,6 +47,8 @@ class DatasetManifest:
     seed: int = 0             # generation seed for synthetic datasets
     file_records: tuple[int, ...] | None = None   # variable layout
     file_names: tuple[str, ...] | None = None     # on-disk names
+    file_starts: tuple[float, ...] | None = None  # UTC epoch s per file
+    file_dropped: tuple[int, ...] | None = None   # tail frames dropped
 
     def __post_init__(self):
         if self.file_records is not None:
@@ -61,17 +63,56 @@ class DatasetManifest:
             raise ValueError(
                 f"file_names has {len(self.file_names)} entries "
                 f"for n_files={self.n_files}")
+        if self.file_dropped is not None \
+                and len(self.file_dropped) != self.n_files:
+            raise ValueError(
+                f"file_dropped has {len(self.file_dropped)} entries "
+                f"for n_files={self.n_files}")
+        if self.file_starts is not None:
+            if len(self.file_starts) != self.n_files:
+                raise ValueError(
+                    f"file_starts has {len(self.file_starts)} entries "
+                    f"for n_files={self.n_files}")
+            self._validate_overlap()
+
+    def _validate_overlap(self) -> None:
+        """Overlapping recordings are a corpus defect, not a warning:
+        two files claiming the same UTC instant would publish two values
+        for one time coordinate.  (Files may legally abut or leave
+        gaps — duty-cycled recorders do — but never overlap.)"""
+        order = sorted(range(self.n_files),
+                       key=lambda i: self.file_starts[i])
+        for a, b in zip(order, order[1:]):
+            # audible span includes tail frames dropped from the record
+            # grid — they still occupy real time on the hydrophone
+            span = (self.records_in_file(a) * self.record_size
+                    + (self.file_dropped[a] if self.file_dropped else 0)
+                    ) / self.fs
+            end_a = self.file_starts[a] + span
+            if self.file_starts[b] < end_a - 1e-9:
+                raise ValueError(
+                    f"timestamp overlap: {self.file_name(a)!r} (starts "
+                    f"{self.file_starts[a]:.3f}, spans {span:.3f}s) "
+                    f"overlaps {self.file_name(b)!r} (starts "
+                    f"{self.file_starts[b]:.3f}) by "
+                    f"{end_a - self.file_starts[b]:.3f}s — overlapping "
+                    f"recordings cannot share one UTC time axis")
 
     @classmethod
     def from_files(cls, file_records, record_size: int, fs: float,
-                   file_names=None, seed: int = 0) -> "DatasetManifest":
+                   file_names=None, seed: int = 0, file_starts=None,
+                   file_dropped=None) -> "DatasetManifest":
         """Variable-layout constructor: one record count per file."""
         fr = tuple(int(r) for r in file_records)
         return cls(n_files=len(fr), records_per_file=0,
                    record_size=record_size, fs=fs, seed=seed,
                    file_records=fr,
                    file_names=None if file_names is None
-                   else tuple(file_names))
+                   else tuple(file_names),
+                   file_starts=None if file_starts is None
+                   else tuple(float(t) for t in file_starts),
+                   file_dropped=None if file_dropped is None
+                   else tuple(int(d) for d in file_dropped))
 
     @property
     def n_records(self) -> int:
@@ -119,6 +160,73 @@ class DatasetManifest:
         off = self.file_offsets
         fi = np.searchsorted(off, idx, side="right") - 1
         return fi, idx - off[fi]
+
+    # ---- absolute time axis ------------------------------------------
+
+    @property
+    def has_timestamps(self) -> bool:
+        return self.file_starts is not None
+
+    @functools.cached_property
+    def _starts_array(self) -> np.ndarray:
+        """Per-file start times, shape (n_files,): UTC epoch seconds
+        when timestamped, else each file's offset into a relative axis
+        that starts at 0 (contiguous, gap-free by construction)."""
+        if self.file_starts is not None:
+            return np.asarray(self.file_starts, np.float64)
+        return self.file_offsets[:-1].astype(np.float64) \
+            * (self.record_size / self.fs)
+
+    def record_times(self, record_idx) -> np.ndarray:
+        """Record indices -> start times in seconds (float64).
+
+        UTC epoch seconds when the manifest is timestamped, else
+        seconds since the start of the dataset — either way
+        ``file_start + record_within_file * record_size / fs``, so
+        window edges and event onsets are pure arithmetic on top.
+        """
+        idx = np.atleast_1d(np.asarray(record_idx, np.int64))
+        fi, ri = self.locate_many(idx)
+        return self._starts_array[fi] \
+            + ri.astype(np.float64) * (self.record_size / self.fs)
+
+    def coverage(self) -> list[tuple[float, float]]:
+        """Merged audible intervals [start, end) in time order.
+
+        Each file covers ``records * record_size + dropped_tail``
+        samples of real time; abutting/overlap-free files merge into
+        maximal contiguous intervals, so ``len(coverage()) - 1`` is the
+        number of recording gaps.
+        """
+        spans = []
+        for i in range(self.n_files):
+            n = self.records_in_file(i) * self.record_size \
+                + (self.file_dropped[i] if self.file_dropped else 0)
+            if n == 0:
+                continue
+            start = float(self._starts_array[i])
+            spans.append((start, start + n / self.fs))
+        spans.sort()
+        merged: list[tuple[float, float]] = []
+        for start, end in spans:
+            if merged and start <= merged[-1][1] + 1e-9:
+                merged[-1] = (merged[-1][0], max(merged[-1][1], end))
+            else:
+                merged.append((start, end))
+        return merged
+
+    def gap_seconds(self) -> float:
+        """Total un-recorded time inside the dataset's UTC window."""
+        cov = self.coverage()
+        return sum(b[0] - a[1] for a, b in zip(cov, cov[1:]))
+
+    def utc_window(self) -> tuple[float, float] | None:
+        """(first start, last end) of the covered span, or None when
+        the dataset is empty."""
+        cov = self.coverage()
+        if not cov:
+            return None
+        return cov[0][0], cov[-1][1]
 
 
 @dataclasses.dataclass(frozen=True)

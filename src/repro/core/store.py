@@ -44,6 +44,37 @@ class FeatureStore:
         os.makedirs(root, exist_ok=True)
         self._arrays: dict[str, np.memmap] | None = None
         self._events: dict[str, dict] | None = None
+        self._instrument: dict | None = None
+
+    # -- instrument provenance ----------------------------------------
+    def set_instrument(self, instrument) -> None:
+        """Pin the calibration chain this store's values are produced
+        under; it commits with every cursor.  A store with committed
+        state under a DIFFERENT calibration refuses loudly — resuming
+        would mix two pressure scales in one output, which no readback
+        could ever detect.
+
+        Accepts an :class:`repro.meta.instrument.Instrument`, a
+        state dict, or None (uncalibrated).
+        """
+        state = None if instrument is None \
+            else instrument.to_state() if hasattr(instrument, "to_state") \
+            else dict(instrument)
+        prev = self.load_cursor()
+        if prev is not None and prev.get("instrument") != state:
+            raise StoreIntegrityError(
+                f"store {self.root!r} was committed under instrument "
+                f"{prev.get('instrument')!r} but this run presents "
+                f"{state!r}: a resumed job must use the exact "
+                f"calibration of its committed records — fix the "
+                f"instrument or start a fresh store directory",
+                path=self._cursor_path())
+        self._instrument = state
+
+    def load_instrument(self) -> dict | None:
+        """The committed instrument state dict, or None."""
+        st = self.load_cursor()
+        return None if st is None else st.get("instrument")
 
     # -- result arrays ------------------------------------------------
     def _array_path(self, name: str) -> str:
@@ -273,6 +304,15 @@ class FeatureStore:
         # per-shard cursors carry the rest of the progress state
         state = {"cursor": cursor, "step": int(step),
                  "plan": plan_state, "live": live}
+        if self._instrument is not None:
+            state["instrument"] = self._instrument
+        else:
+            # a commit from a path that never set the instrument must
+            # not erase committed provenance (set_instrument already
+            # refused any actual mismatch)
+            prev_inst = self.load_instrument()
+            if prev_inst is not None:
+                state["instrument"] = prev_inst
         shard_cursors = getattr(plan, "shard_cursors", None)
         if shard_cursors is not None:
             state["shard_cursors"] = [int(c) for c in shard_cursors(step)]

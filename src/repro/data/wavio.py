@@ -38,6 +38,7 @@ from __future__ import annotations
 import collections
 import os
 import threading
+import warnings
 import wave
 
 import numpy as np
@@ -45,6 +46,8 @@ import numpy as np
 from repro.core.manifest import DatasetManifest
 from repro.core.params import PCM_DECODE_SCALE
 from repro.faults.errors import TruncatedRecordError
+from repro.meta.instrument import Instrument
+from repro.meta.timestamps import timestamps_for
 
 
 def write_dataset(root: str, m: DatasetManifest, gen=None) -> list[str]:
@@ -70,20 +73,36 @@ def write_dataset(root: str, m: DatasetManifest, gen=None) -> list[str]:
 
 
 def scan_dataset(root: str, record_size: int, *, fs: float | None = None,
-                 seed: int = 0) -> DatasetManifest:
+                 seed: int = 0,
+                 timestamps: str | bool | None = "auto"
+                 ) -> DatasetManifest:
     """Build a manifest from the real wav headers under ``root``.
 
     Files are taken in sorted name order; each contributes
-    ``frames // record_size`` records (a trailing partial record is
-    dropped — the paper's segmentation does the same).  All files must
-    share one sample rate, which becomes the manifest ``fs`` unless an
-    explicit ``fs`` is passed (then a mismatch raises).
+    ``frames // record_size`` records.  A trailing partial record is
+    dropped from the record grid (the paper's segmentation does the
+    same) but never silently: one aggregated ``RuntimeWarning`` names
+    the total dropped audio, and the per-file dropped-frame counts ride
+    the manifest (``file_dropped``) so coverage/gap accounting stays
+    accurate — the tail is real recorded time even if unanalyzed.
+
+    All files must share one sample rate, which becomes the manifest
+    ``fs`` unless an explicit ``fs`` is passed (then a mismatch raises).
+
+    ``timestamps`` controls the UTC time axis: ``"auto"`` (default)
+    parses per-file start times from the filenames using the built-in
+    PAM conventions when ALL names parse (a mix raises; none parsing
+    leaves a relative axis); any other string is an explicit
+    strptime/regex pattern every file must match (see
+    :mod:`repro.meta.timestamps`); ``None``/``False`` disables parsing.
+    When timestamps are present, overlapping files raise a loud
+    ``ValueError`` from the manifest.
     """
     names = sorted(f for f in os.listdir(root)
                    if f.lower().endswith(".wav"))
     if not names:
         raise FileNotFoundError(f"no .wav files under {root!r}")
-    counts, rates = [], set()
+    counts, dropped, rates = [], [], set()
     for name in names:
         with wave.open(os.path.join(root, name), "rb") as w:
             if w.getnchannels() != 1 or w.getsampwidth() != 2:
@@ -92,7 +111,9 @@ def scan_dataset(root: str, record_size: int, *, fs: float | None = None,
                     f"{w.getnchannels()} channel(s) x "
                     f"{w.getsampwidth()} byte(s)")
             rates.add(float(w.getframerate()))
-            counts.append(w.getnframes() // record_size)
+            frames = w.getnframes()
+            counts.append(frames // record_size)
+            dropped.append(frames % record_size)
     if len(rates) > 1:
         raise ValueError(
             f"mixed sample rates under {root!r}: {sorted(rates)}")
@@ -100,15 +121,39 @@ def scan_dataset(root: str, record_size: int, *, fs: float | None = None,
     if fs is not None and float(fs) != rate:
         raise ValueError(
             f"dataset under {root!r} is {rate} Hz, requested {fs} Hz")
+    if any(dropped):
+        clipped = [(n, d) for n, d in zip(names, dropped) if d]
+        total_s = sum(d for _, d in clipped) / rate
+        shown = ", ".join(f"{n} ({d / rate:.3f}s)"
+                          for n, d in clipped[:4])
+        more = f", +{len(clipped) - 4} more" if len(clipped) > 4 else ""
+        warnings.warn(
+            f"scan_dataset({root!r}): dropping {total_s:.3f}s of audio "
+            f"in partial tail records across {len(clipped)} of "
+            f"{len(names)} files ({shown}{more}); tails shorter than "
+            f"record_size={record_size} frames are not analyzed but "
+            f"still count toward coverage", RuntimeWarning,
+            stacklevel=2)
+    starts = None
+    if timestamps not in (None, False):
+        starts = timestamps_for(
+            names, None if timestamps == "auto" else timestamps)
     return DatasetManifest.from_files(
         counts, record_size=record_size, fs=rate, file_names=names,
-        seed=seed)
+        seed=seed, file_starts=starts, file_dropped=dropped)
 
 
 def _calibration_gains(m: DatasetManifest, calibration) -> np.ndarray | None:
-    """Normalize a calibration spec to one float32 gain per file."""
+    """Normalize a calibration spec to one float32 gain per file.
+
+    Accepts an :class:`~repro.meta.instrument.Instrument` (the gain is
+    *derived* from the physical model — preferred), a scalar, or one
+    gain per file.
+    """
     if calibration is None:
         return None
+    if isinstance(calibration, Instrument):
+        calibration = calibration.gain
     g = np.asarray(calibration, np.float32)
     if g.ndim == 0:
         return np.full(m.n_files, g, np.float32)

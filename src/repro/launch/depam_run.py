@@ -10,7 +10,28 @@ Spark job in the paper:
       [--window N | --window per-file] [--wav-dir /path/to/wavs] \
       [--data-root /path/to/real/wavs] [--prefetch-depth 2] [--sync-io] \
       [--payload int16] [--events [--event-threshold-db DB]] \
-      [--list-features]
+      [--to store|zarr|netcdf] [--instrument SENS[:GAIN[:VPP]]] \
+      [--timestamps auto|none|PATTERN] [--list-features]
+
+``--to`` picks the output format: ``store`` (the raw resumable
+FeatureStore, default), ``zarr`` (a labeled, xarray-openable Zarr
+group at ``--out/features.zarr``), or ``netcdf`` (a single labeled
+``--out/features.nc``, materialized atomically when the job
+completes).  All three are resumable and bitwise-identical.
+
+``--instrument SENS[:GAIN[:VPP]]`` declares the recording chain
+(hydrophone sensitivity in dB re 1 V/µPa, preamp gain in dB, ADC
+peak-to-peak volts) for wav-fed jobs: calibration gain is derived
+from it, it lands in the output attrs, and it is committed with the
+resume cursor — resuming under a different instrument is refused.
+
+``--timestamps`` controls parsing of per-file UTC start times from
+the wav filenames scanned by ``--data-root``: ``auto`` (default)
+tries the builtin PAM naming conventions, ``none`` disables parsing,
+anything else is a strptime pattern (``%``-style) or a regex with
+named groups.  When the dataset is timestamped, the absolute UTC
+coverage window and total gap duration are printed and recorded in
+``summary.json``.
 
 ``--events`` turns on the on-device transient detector: a ragged
 ``events`` log (onset, duration, peak bin, peak dB per detection) and
@@ -110,6 +131,21 @@ def parse_window(arg: str | None):
             f"'epoch', got {arg!r}")
 
 
+def parse_instrument(arg: str):
+    """``--instrument SENS[:GAIN[:VPP]]`` -> :class:`api.Instrument`."""
+    parts = arg.split(":")
+    if not 1 <= len(parts) <= 3:
+        raise SystemExit(
+            f"--instrument takes SENS[:GAIN[:VPP]], got {arg!r}")
+    try:
+        sens = float(parts[0])
+        gain = float(parts[1]) if len(parts) > 1 else 0.0
+        vpp = float(parts[2]) if len(parts) > 2 else 2.0
+        return api.Instrument(sensitivity_db=sens, gain_db=gain, vpp=vpp)
+    except ValueError as e:
+        raise SystemExit(f"--instrument: {e}")
+
+
 def main() -> None:
     # app-level choice (deliberately not made by the library): the
     # engine donates payload buffers for the early free; the jax
@@ -184,6 +220,23 @@ def main() -> None:
     ap.add_argument("--sync-io", action="store_true",
                     help="disable the pipelined executor (synchronous "
                          "fetch/compute/write; bitwise-identical output)")
+    ap.add_argument("--to", dest="fmt", default="store",
+                    choices=("store", "zarr", "netcdf"),
+                    help="output format: the raw FeatureStore, a "
+                         "labeled Zarr group (--out/features.zarr), or "
+                         "a labeled NetCDF file (--out/features.nc); "
+                         "all resumable, all bitwise-identical")
+    ap.add_argument("--instrument", default=None,
+                    help="recording chain SENS[:GAIN[:VPP]] — "
+                         "hydrophone sensitivity dB re 1 V/uPa, preamp "
+                         "gain dB, ADC peak-to-peak volts; derives the "
+                         "calibration gain and is committed with the "
+                         "resume cursor")
+    ap.add_argument("--timestamps", default="auto",
+                    help="per-file UTC start parsing for --data-root "
+                         "scans: 'auto' (builtin PAM conventions), "
+                         "'none', a strptime pattern, or a regex with "
+                         "named groups")
     a = ap.parse_args()
 
     base = PARAM_SET_1 if a.param_set == 1 else PARAM_SET_2
@@ -199,7 +252,9 @@ def main() -> None:
     if a.out is None:
         ap.error("--out is required (unless --list-features)")
     if a.data_root:
-        m = api.scan_dataset(a.data_root, p.record_size, seed=42)
+        ts = None if a.timestamps == "none" else a.timestamps
+        m = api.scan_dataset(a.data_root, p.record_size, seed=42,
+                             timestamps=ts)
         if m.fs != p.fs:
             print(f"[depam] WARNING: dataset is {m.fs:.0f} Hz but param "
                   f"set {a.param_set} assumes {p.fs:.0f} Hz — frequency "
@@ -215,10 +270,36 @@ def main() -> None:
     print(f"[depam] param set {a.param_set} (nfft={p.nfft}, "
           f"overlap={p.window_overlap}); dataset {m.n_records} records "
           f"({m.total_gb:.3f} GB); features {feats}")
+    coverage = None
+    if m.has_timestamps:
+        w0, w1 = m.utc_window()
+        gap = m.gap_seconds()
+        coverage = {"utc_start": api.format_utc(w0),
+                    "utc_end": api.format_utc(w1),
+                    "gap_seconds": gap}
+        print(f"[depam] coverage: {coverage['utc_start']} .. "
+              f"{coverage['utc_end']} ({gap:.1f} s of gaps)")
 
-    store = FeatureStore(a.out)
+    if a.fmt == "zarr":
+        sink = api.ZarrSink(f"{a.out}/features.zarr",
+                            chunk_records=a.chunk_records)
+    elif a.fmt == "netcdf":
+        sink = api.NetCDFSink(f"{a.out}/features.nc")
+    else:
+        sink = FeatureStore(a.out)
     j = (api.job(m, p).features(*feats).chunk(a.chunk_records)
-         .kernels(not a.no_kernels).to(store).window(**win_kwargs))
+         .kernels(not a.no_kernels).to(sink).window(**win_kwargs))
+    if a.instrument is not None:
+        if not (a.data_root or a.wav_dir):
+            ap.error("--instrument needs a wav-fed job "
+                     "(--wav-dir/--data-root); synthesized records "
+                     "carry no recording chain to calibrate")
+        inst = parse_instrument(a.instrument)
+        j = j.instrument(inst)
+        print(f"[depam] instrument: sensitivity "
+              f"{inst.sensitivity_db:g} dB re 1 V/uPa, gain "
+              f"{inst.gain_db:g} dB, vpp {inst.vpp:g} V "
+              f"(linear gain {inst.gain:.6g})")
     if a.data_parallel is not None:
         from repro.launch.mesh import make_host_mesh
         mesh = make_host_mesh(data=a.data_parallel)
@@ -256,8 +337,10 @@ def main() -> None:
 
     start_step = j.resume_step()
     if start_step > 0:
+        cur = sink.load_cursor() if a.fmt == "store" \
+            else sink.describe().get("committed_records")
         print(f"[depam] resuming at step {start_step} "
-              f"(cursor {store.load_cursor()['cursor']})")
+              f"(cursor {cur['cursor'] if a.fmt == 'store' else cur})")
 
     t0 = time.time()
     out = j.run()
@@ -290,22 +373,33 @@ def main() -> None:
               f"{out.n_records} records ({int(log.kept.sum())} rows "
               f"kept, capacity {log.capacity}"
               + (f", {n_over} records overflowed)" if n_over else ")"))
+    if a.fmt != "store":
+        d = sink.describe()
+        mark = f", committed through {d['committed_utc']}" \
+            if "committed_utc" in d else ""
+        print(f"[depam] output: {d['format']} at {d['path']}{mark}")
     if done == 0:
         # already complete before this run: keep the recorded numbers
         print("[depam] job was already complete; summary.json untouched")
         return
     print(f"[depam] throughput: {rec_s:.2f} records/s, "
           f"{x_rt:.0f}x realtime ({done} records this run)")
+    summary_json = {"records": out.n_records, "seconds": dt,
+                    "gb": m.total_gb, "gb_per_min": gb_min,
+                    "records_per_sec": rec_s, "x_realtime": x_rt,
+                    "executor": mode, "payload": a.payload,
+                    "features": feats, "window": a.window or "epoch",
+                    "windows": {k: list(v.shape)
+                                for k, v in sorted(out.windows.items())},
+                    "events": ev_json,
+                    "output": sink.describe() if a.fmt != "store"
+                    else {"format": "store", "path": a.out}}
+    if coverage is not None:
+        summary_json["coverage"] = coverage
+    if a.instrument is not None:
+        summary_json["instrument"] = inst.to_state()
     with open(f"{a.out}/summary.json", "w") as f:
-        json.dump({"records": out.n_records, "seconds": dt,
-                   "gb": m.total_gb, "gb_per_min": gb_min,
-                   "records_per_sec": rec_s, "x_realtime": x_rt,
-                   "executor": mode, "payload": a.payload,
-                   "features": feats, "window": a.window or "epoch",
-                   "windows": {k: list(v.shape)
-                               for k, v in sorted(out.windows.items())},
-                   "events": ev_json},
-                  f, indent=1)
+        json.dump(summary_json, f, indent=1)
 
 
 if __name__ == "__main__":

@@ -15,10 +15,16 @@ per-tenant progress, step latency, and compile-cache reuse:
 ``--scheduler rr`` (default) is strict round-robin; ``drr`` is
 deficit-weighted round-robin with per-tenant ``--weights``.
 ``--out-root`` gives every tenant its own resumable FeatureStore
-directory instead of in-memory arrays.  ``--verify`` re-runs each
-tenant's job solo after the service drains and asserts the concurrent
-results are bitwise-identical — the service's core invariant,
-demonstrated from the CLI.
+directory instead of in-memory arrays; ``--sink-format zarr``
+upgrades those to labeled, xarray-openable Zarr groups (the batch
+manifest gets synthetic UTC timestamps so the committed
+high-watermark is an absolute time), and the per-tenant sink
+``describe()`` — output format, path, committed UTC — is surfaced
+through ``stats()`` and printed after the drain.  ``--verify``
+re-runs each tenant's job solo after the service drains and asserts
+the concurrent results are bitwise-identical — the service's core
+invariant, demonstrated from the CLI — zarr-sink tenants included
+(their results are read back from the labeled chunks).
 """
 from __future__ import annotations
 
@@ -70,15 +76,27 @@ def run(tenants: int = 2, live: int = 0, files: int = 2,
         features: tuple[str, ...] = ("welch", "spl"), chunk: int = 4,
         quantum: int = 2, scheduler: str = "rr",
         weights: list[float] | None = None, param_set: int = 1,
-        out_root: str | None = None, verify: bool = False,
-        seed: int = 0, timeout: float = 600.0):
+        out_root: str | None = None, sink_format: str = "store",
+        verify: bool = False, seed: int = 0, timeout: float = 600.0):
     """Drive ``tenants`` batch + ``live`` streaming jobs through one
     service; returns ``(results, service)`` with ``results`` mapping
     tenant name -> :class:`~repro.api.job.JobResult`."""
+    if sink_format not in ("store", "zarr"):
+        raise SystemExit(f"--sink-format must be store|zarr, "
+                         f"got {sink_format!r}")
+    if sink_format == "zarr" and out_root is None:
+        raise SystemExit("--sink-format zarr needs --out-root")
     base = PARAM_SET_1 if param_set == 1 else PARAM_SET_2
     p = dataclasses.replace(base, record_size_sec=record_sec)
     m = DatasetManifest(n_files=files, records_per_file=records_per_file,
                         record_size=p.record_size, fs=p.fs, seed=42)
+    if sink_format == "zarr":
+        # synthetic-but-absolute time axis: back-to-back files starting
+        # 2010-06-03T12:00:00Z, so the labeled outputs carry real UTC
+        # coordinates and stats() can report a committed high-watermark
+        span = records_per_file * p.record_size / p.fs
+        m = dataclasses.replace(m, file_starts=tuple(
+            1275566400.0 + i * span for i in range(files)))
     sched = DeficitRoundRobin() if scheduler == "drr" else RoundRobin()
     svc = SoundscapeService(scheduler=sched, quantum=quantum)
     print(f"[serve] {tenants} batch + {live} live tenants over one "
@@ -89,7 +107,10 @@ def run(tenants: int = 2, live: int = 0, files: int = 2,
     def sink_for(name):
         if out_root is None:
             return None
-        return str(pathlib.Path(out_root) / name)
+        path = str(pathlib.Path(out_root) / name)
+        if sink_format == "zarr":
+            return api.ZarrSink(path, chunk_records=chunk)
+        return path
 
     def batch_job():
         return api.job(m, p).features(*features).chunk(chunk)
@@ -135,12 +156,22 @@ def run(tenants: int = 2, live: int = 0, files: int = 2,
         print(f"  {name}: {h.steps_run} steps, "
               f"p50 {_percentile_ms(h.step_seconds, 50):.2f} ms / "
               f"p95 {_percentile_ms(h.step_seconds, 95):.2f} ms per step")
-    cs = svc.stats()["compile"]
+    st = svc.stats()
+    cs = st["compile"]
     print(f"[serve] compile cache: step {cs['step']['hits']} hits / "
           f"{cs['step']['misses']} misses, reduce "
           f"{cs['reduce']['hits']} hits / {cs['reduce']['misses']} "
           f"misses ({cs['step']['entries']} step programs for "
           f"{len(handles)} tenants)")
+    sinks = {name: info["sink"] for name, info in st["tenants"].items()
+             if "sink" in info}
+    if sinks:
+        print("[serve] sinks:")
+        for name, d in sorted(sinks.items()):
+            line = f"  {name}: {d['format']} at {d['path']}"
+            if "committed_utc" in d:
+                line += f" (committed through {d['committed_utc']})"
+            print(line)
 
     if verify:
         for name in sorted(handles):
@@ -185,6 +216,11 @@ def main() -> None:
     ap.add_argument("--out-root", default=None,
                     help="per-tenant FeatureStore directories under "
                          "this root (default: in-memory)")
+    ap.add_argument("--sink-format", choices=("store", "zarr"),
+                    default="store",
+                    help="per-tenant output format under --out-root: "
+                         "raw FeatureStore or labeled Zarr groups "
+                         "(with a synthetic UTC time axis)")
     ap.add_argument("--verify", action="store_true",
                     help="re-run each tenant solo and assert the "
                          "concurrent results are bitwise-identical")
@@ -197,7 +233,7 @@ def main() -> None:
                        if f.strip()),
         chunk=a.chunk, quantum=a.quantum, scheduler=a.scheduler,
         weights=weights, param_set=a.param_set, out_root=a.out_root,
-        verify=a.verify)
+        sink_format=a.sink_format, verify=a.verify)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,19 @@
+"""Metadata subsystem: UTC time axis + instrument calibration chain.
+
+Everything needed to turn anonymous record-indexed feature arrays into
+interoperable labeled datasets: filename-timestamp parsing
+(:mod:`repro.meta.timestamps`) and the hydrophone calibration model
+(:mod:`repro.meta.instrument`).  Pure stdlib — safe to import from any
+layer without cycles.
+"""
+from repro.meta.instrument import Instrument
+from repro.meta.timestamps import (TimestampParseError, format_utc,
+                                   parse_timestamp, timestamps_for)
+
+__all__ = [
+    "Instrument",
+    "TimestampParseError",
+    "format_utc",
+    "parse_timestamp",
+    "timestamps_for",
+]

@@ -349,13 +349,20 @@ class SoundscapeService:
     # -- observability ---------------------------------------------------
     def stats(self) -> dict:
         """Service-level counters: compile-cache hits/misses, per-tenant
-        progress, and the scheduling trace length."""
+        progress (including each tenant's sink ``describe()`` — output
+        format, path, and for timestamped labeled sinks the committed
+        UTC high-watermark), and the scheduling trace length."""
         with self._lock:
-            tenants = {
-                name: {"state": t.state, "steps": t.steps_run,
-                       "records": (t.records_done if t.state != "queued"
-                                   else 0),
-                       "weight": t.weight, "restarts": t.restarts}
-                for name, t in self._tenants.items()}
+            tenants = {}
+            for name, t in self._tenants.items():
+                info = {"state": t.state, "steps": t.steps_run,
+                        "records": (t.records_done if t.state != "queued"
+                                    else 0),
+                        "weight": t.weight, "restarts": t.restarts}
+                sink = getattr(t.stepper, "sink", None)
+                desc = sink.describe() if sink is not None else {}
+                if desc:
+                    info["sink"] = desc
+                tenants[name] = info
             return {"compile": self.cache.stats(), "tenants": tenants,
                     "turns": len(self.trace), "restarts": self.restarts}

@@ -1,0 +1,244 @@
+"""Interoperable-output metadata: filename timestamp parsing, the
+Instrument calibration chain, the manifest's absolute time axis
+(overlap refusal, coverage/gaps), and scan_dataset's timestamp and
+dropped-tail accounting."""
+import dataclasses
+import os
+import warnings
+import wave
+
+import numpy as np
+import pytest
+
+from repro.core.manifest import DatasetManifest
+from repro.core.store import FeatureStore, StoreIntegrityError
+from repro.data.wavio import scan_dataset, write_dataset
+from repro.meta import (Instrument, TimestampParseError, format_utc,
+                        parse_timestamp, timestamps_for)
+
+T0 = 1275566400.0                       # 2010-06-03T12:00:00Z
+
+
+class TestParseTimestamp:
+    @pytest.mark.parametrize("name", [
+        "site3_20100603_120000.wav",
+        "site3_20100603-120000.wav",
+        "20100603T120000.wav",
+        "2010-06-03_12-00-00.wav",
+        "2010-06-03T12-00-00.wav",
+        "5112.100603120000.wav",        # SoundTrap <serial>.<yymmddHHMMSS>
+    ])
+    def test_builtin_conventions(self, name):
+        assert parse_timestamp(name) == T0
+
+    @pytest.mark.parametrize("name", [
+        "file_00000.wav",               # no digits run
+        "site_12345678.wav",            # 8 digits but no time part
+        "5112100603120000.wav",         # SoundTrap run not dot-delimited
+    ])
+    def test_unparseable_is_none(self, name):
+        assert parse_timestamp(name) is None
+
+    def test_strptime_override(self):
+        # day-of-year logger: 2010.154.1200 -> June 3rd 12:00
+        got = parse_timestamp("buoy_2010.154.1200.wav", "%Y.%j.%H%M")
+        assert got == T0
+        assert parse_timestamp("buoy.wav", "%Y.%j.%H%M") is None
+
+    def test_regex_override_named_groups(self):
+        rx = (r"(?P<day>\d{2})x(?P<month>\d{2})x(?P<year>\d{4})"
+              r"@(?P<hour>\d{2})(?P<minute>\d{2})")
+        assert parse_timestamp("03x06x2010@1200.wav", rx) == T0
+
+    def test_regex_without_groups_refused(self):
+        with pytest.raises(TimestampParseError, match="named groups"):
+            parse_timestamp("x.wav", r"\d{8}")
+
+    def test_unsupported_directive_refused(self):
+        with pytest.raises(TimestampParseError, match="%f"):
+            parse_timestamp("x.wav", "%Y%m%d_%f")
+
+
+class TestTimestampsFor:
+    def test_all_parse(self):
+        names = ["a_20100603_120000.wav", "a_20100603_120100.wav"]
+        assert timestamps_for(names) == (T0, T0 + 60.0)
+
+    def test_none_parse_is_relative_axis(self):
+        assert timestamps_for(["a.wav", "b.wav"]) is None
+
+    def test_mix_refused_naming_files(self):
+        with pytest.raises(TimestampParseError, match="'plain.wav'"):
+            timestamps_for(["a_20100603_120000.wav", "plain.wav"])
+
+    def test_explicit_pattern_requires_all(self):
+        with pytest.raises(TimestampParseError, match="every file"):
+            timestamps_for(["x.wav"], "%Y%m%d_%H%M%S")
+
+    def test_require_flag(self):
+        with pytest.raises(TimestampParseError):
+            timestamps_for(["x.wav"], require=True)
+
+
+class TestFormatUtc:
+    def test_whole_seconds(self):
+        assert format_utc(T0) == "2010-06-03T12:00:00Z"
+
+    def test_fractional_trimmed(self):
+        assert format_utc(T0 + 0.25) == "2010-06-03T12:00:00.25Z"
+
+
+class TestInstrument:
+    def test_gain_matches_pypam_model(self):
+        # gain = (vpp/2) / 10**((sensitivity+gain)/20)
+        inst = Instrument(sensitivity_db=-165.0, gain_db=0.0, vpp=2.0)
+        assert inst.gain == pytest.approx(10.0 ** (165.0 / 20.0))
+        inst = Instrument(sensitivity_db=-170.0, gain_db=12.0, vpp=3.0)
+        assert inst.gain == pytest.approx(
+            1.5 / 10.0 ** ((-170.0 + 12.0) / 20.0))
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="vpp"):
+            Instrument(sensitivity_db=-165.0, vpp=0.0)
+        with pytest.raises(ValueError, match="finite"):
+            Instrument(sensitivity_db=float("nan"))
+
+    def test_state_roundtrip_and_attrs(self):
+        inst = Instrument(-170.0, gain_db=12.0, vpp=2.0, name="ST300")
+        assert Instrument.from_state(inst.to_state()) == inst
+        attrs = inst.as_attrs()
+        assert attrs["instrument_sensitivity_db_re_1V_per_uPa"] == -170.0
+        assert attrs["instrument_calibration_gain_uPa"] \
+            == pytest.approx(inst.gain)
+        assert attrs["instrument_name"] == "ST300"
+
+    def test_frozen_and_hashable(self):
+        inst = Instrument(-165.0)
+        assert {inst: 1}[Instrument(-165.0)] == 1
+        with pytest.raises(dataclasses.FrozenInstanceError):
+            inst.vpp = 3.0
+
+    def test_store_commits_and_refuses_changed_instrument(self, tmp_path):
+        from repro.core.manifest import ShardPlan
+        d = str(tmp_path / "s")
+        st = FeatureStore(d)
+        st.set_instrument(Instrument(-165.0))
+        st.commit_state(ShardPlan(start=0, stop=8, n_shards=1,
+                                  chunk_records=4), 0, None, 0.0)
+        st2 = FeatureStore(d)
+        assert Instrument.from_state(st2.load_instrument()) \
+            == Instrument(-165.0)
+        st2.set_instrument(Instrument(-165.0))       # same: fine
+        with pytest.raises(StoreIntegrityError, match="instrument"):
+            FeatureStore(d).set_instrument(Instrument(-180.0))
+        with pytest.raises(StoreIntegrityError, match="instrument"):
+            FeatureStore(d).set_instrument(None)     # dropping it, too
+
+
+def ts_manifest(counts=(3, 2), starts=(T0, T0 + 120.0), fs=1000.0,
+                record_size=500, dropped=None, names=None):
+    return DatasetManifest.from_files(
+        counts, record_size=record_size, fs=fs, seed=3,
+        file_names=names, file_starts=starts, file_dropped=dropped)
+
+
+class TestManifestTimeAxis:
+    def test_record_times_arithmetic(self):
+        m = ts_manifest()                    # 0.5 s records
+        got = m.record_times(np.arange(m.n_records))
+        np.testing.assert_allclose(
+            got, [T0, T0 + 0.5, T0 + 1.0, T0 + 120.0, T0 + 120.5])
+
+    def test_relative_axis_without_timestamps(self):
+        m = ts_manifest(starts=None)
+        got = m.record_times(np.arange(m.n_records))
+        np.testing.assert_allclose(got, [0.0, 0.5, 1.0, 1.5, 2.0])
+        assert not m.has_timestamps
+
+    def test_overlap_refused(self):
+        with pytest.raises(ValueError, match="overlap"):
+            ts_manifest(starts=(T0, T0 + 1.0))   # file 0 spans 1.5 s
+
+    def test_abutting_files_legal_and_merge(self):
+        m = ts_manifest(starts=(T0, T0 + 1.5))   # exactly contiguous
+        assert m.coverage() == [(T0, T0 + 2.5)]
+        assert m.gap_seconds() == 0.0
+
+    def test_dropped_tail_counts_as_audible_time(self):
+        # file 0: 3 records + 250 dropped frames = 1.75 s of audio;
+        # a start 1.6 s later therefore overlaps
+        with pytest.raises(ValueError, match="overlap"):
+            ts_manifest(starts=(T0, T0 + 1.6), dropped=(250, 0))
+        m = ts_manifest(starts=(T0, T0 + 1.75), dropped=(250, 0))
+        assert m.coverage() == [(T0, T0 + 2.75)]
+
+    def test_coverage_gaps_and_window(self):
+        m = ts_manifest()                    # gap: 120 - 1.5 = 118.5 s
+        cov = m.coverage()
+        assert len(cov) == 2
+        assert m.gap_seconds() == pytest.approx(118.5)
+        assert m.utc_window() == (T0, T0 + 121.0)
+
+    def test_frozen_manifest_still_hashable(self):
+        hash(ts_manifest())
+
+
+def write_wavs(root, counts, names, fs=1000.0, record_size=500,
+               extra_frames=0):
+    m = DatasetManifest.from_files(counts, record_size=record_size,
+                                   fs=fs, seed=7, file_names=names)
+    write_dataset(str(root), m)
+    if extra_frames:
+        # append a partial tail record to the FIRST (sorted) file
+        path = os.path.join(str(root), sorted(names)[0])
+        with wave.open(path, "rb") as r:
+            params, frames = r.getparams(), r.readframes(r.getnframes())
+        with wave.open(path, "wb") as w:
+            w.setparams(params)
+            w.writeframes(frames + b"\x00\x00" * extra_frames)
+    return m
+
+
+class TestScanTimestamps:
+    NAMES = ("site_20100603_120000.wav", "site_20100603_120100.wav")
+
+    def test_scan_parses_starts(self, tmp_path):
+        write_wavs(tmp_path, (3, 2), self.NAMES)
+        m = scan_dataset(str(tmp_path), 500)
+        assert m.has_timestamps
+        assert m.file_starts == (T0, T0 + 60.0)
+        assert m.utc_window() == (T0, T0 + 61.0)
+
+    def test_scan_mix_refused(self, tmp_path):
+        write_wavs(tmp_path, (2, 2),
+                   ("site_20100603_120000.wav", "plain.wav"))
+        with pytest.raises(TimestampParseError, match="plain.wav"):
+            scan_dataset(str(tmp_path), 500)
+
+    def test_scan_timestamps_off(self, tmp_path):
+        write_wavs(tmp_path, (2, 2), self.NAMES)
+        m = scan_dataset(str(tmp_path), 500, timestamps=None)
+        assert not m.has_timestamps
+
+    def test_scan_pattern_override(self, tmp_path):
+        write_wavs(tmp_path, (2, 2),
+                   ("d2010.154.1200.wav", "d2010.154.1201.wav"))
+        m = scan_dataset(str(tmp_path), 500, timestamps="%Y.%j.%H%M")
+        assert m.file_starts == (T0, T0 + 60.0)
+
+    def test_dropped_tails_warn_once_aggregated(self, tmp_path):
+        write_wavs(tmp_path, (3, 2), self.NAMES, extra_frames=200)
+        with pytest.warns(RuntimeWarning, match="0.2") as rec:
+            m = scan_dataset(str(tmp_path), 500)
+        tail = [w for w in rec if "dropped" in str(w.message)]
+        assert len(tail) == 1                      # ONE aggregated warning
+        assert self.NAMES[0] in str(tail[0].message)
+        assert m.file_dropped == (200, 0)
+
+    def test_no_tails_no_warning(self, tmp_path):
+        write_wavs(tmp_path, (3, 2), self.NAMES)
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            scan_dataset(str(tmp_path), 500)
+        assert not [w for w in rec
+                    if issubclass(w.category, RuntimeWarning)]
